@@ -1,0 +1,106 @@
+"""Paper Table 2 / Tables 7-10: Brownian Interval vs Virtual Brownian Tree.
+
+Access-pattern benchmarks over subdivided [0, 1]: sequential (an SDE solve),
+doubly sequential (solve + adjoint), and random access; several batch sizes.
+Reports the fastest of ``reps`` runs (the paper's protocol: "errors in speed
+benchmarks are one-sided").
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _intervals(n: int):
+    ts = np.linspace(0.0, 1.0, n + 1)
+    return list(zip(ts[:-1], ts[1:]))
+
+
+def bench_access(maker, pattern: str, n_intervals: int, reps: int = 5):
+    best = float("inf")
+    for _ in range(reps):
+        bi = maker()
+        iv = _intervals(n_intervals)
+        if pattern == "sequential":
+            order = iv
+        elif pattern == "doubly":
+            order = iv + iv[::-1]
+        else:  # random
+            rng = np.random.default_rng(0)
+            order = [iv[i] for i in rng.permutation(len(iv))]
+        t0 = time.perf_counter()
+        for s, t in order:
+            bi(s, t)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sde_solve_host(bi, n_steps: int, size: int):
+    """Euler–Maruyama driven by a host Brownian source + backward sweep."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((size,)) * 0.1
+    y = np.zeros(size)
+    dt = 1.0 / n_steps
+    for n in range(n_steps):
+        dw = bi(n * dt, (n + 1) * dt)
+        y = y + np.tanh(a * y) * dt + dw.reshape(-1)[:size] * 0.1
+    for n in range(n_steps - 1, -1, -1):  # adjoint pass reuses the same noise
+        dw = bi(n * dt, (n + 1) * dt)
+        y = y - np.tanh(a * y) * dt - dw.reshape(-1)[:size] * 0.1
+    return y
+
+
+def main(quick: bool = False):
+    from repro.core.brownian_interval import BrownianInterval, HostVirtualBrownianTree
+
+    sizes = [1, 2560] if quick else [1, 2560, 32768]
+    n_intervals = 100
+    rows = []
+    for size in sizes:
+        shape = (size,)
+        for pattern in ("sequential", "doubly", "random"):
+            t_bi = bench_access(
+                lambda: BrownianInterval(0.0, 1.0, shape, seed=1,
+                                         preplant_dt=1.0 / n_intervals),
+                pattern, n_intervals)
+            t_vbt = bench_access(
+                lambda: HostVirtualBrownianTree(0.0, 1.0, shape, seed=1, eps=1e-5),
+                pattern, n_intervals)
+            rows.append(("brownian", f"{pattern},size={size}", t_vbt / t_bi))
+            print(f"brownian,{pattern},size={size},interval={t_bi*1e3:.2f}ms,"
+                  f"vbtree={t_vbt*1e3:.2f}ms,speedup={t_vbt/t_bi:.2f}x", flush=True)
+
+    # SDE-solve benchmark (paper Table 10): Euler-Maruyama forward + adjoint
+    # backward sweep driven by each Brownian source.
+    for size in sizes:
+        t_bi = float("inf")
+        t_vbt = float("inf")
+        for _ in range(3):
+            bi = BrownianInterval(0.0, 1.0, (size,), seed=2,
+                                  preplant_dt=1.0 / n_intervals)
+            t0 = time.perf_counter()
+            sde_solve_host(bi, n_intervals, size)
+            t_bi = min(t_bi, time.perf_counter() - t0)
+            vb = HostVirtualBrownianTree(0.0, 1.0, (size,), seed=2, eps=1e-5)
+            t0 = time.perf_counter()
+            sde_solve_host(vb, n_intervals, size)
+            t_vbt = min(t_vbt, time.perf_counter() - t0)
+        rows.append(("brownian", f"sde_solve,size={size}", t_vbt / t_bi))
+        print(f"brownian,sde_solve,size={size},interval={t_bi*1e3:.2f}ms,"
+              f"vbtree={t_vbt*1e3:.2f}ms,speedup={t_vbt/t_bi:.2f}x", flush=True)
+
+    # cache effectiveness (the paper's O(1) amortised claim)
+    bi = BrownianInterval(0.0, 1.0, (16,), seed=3, preplant_dt=0.01)
+    for s, t in _intervals(100):
+        bi(s, t)
+    hits, misses = bi.cache_stats
+    rate = hits / max(hits + misses, 1)
+    rows.append(("brownian", "lru_hit_rate", rate))
+    print(f"brownian,lru_hit_rate,{rate:.3f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

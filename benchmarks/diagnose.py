@@ -1,0 +1,94 @@
+"""Collective/traffic diagnostics for one costing cell.
+
+Prints the top collective ops (type, per-device bytes, source op_name) of a
+1-unit unrolled lower — the measurement step of each §Perf iteration.
+
+    PYTHONPATH=src python benchmarks/diagnose.py dbrx-132b train_4k [k]
+    PYTHONPATH=src python benchmarks/diagnose.py dbrx-132b train_4k 1 sequence_parallel=true
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import re
+import sys
+from collections import defaultdict
+
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_META = re.compile(r'op_name="([^"]*)"')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8}
+
+
+def _nbytes(dt, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dt, 4)
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    k = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+    overrides = {}
+    for kv in sys.argv[4:]:
+        key, v = kv.split("=")
+        overrides[key] = {"true": True, "false": False}.get(v.lower(), v)
+
+    from benchmarks.roofline import _costing_cfg
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import analyze, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cfg = _costing_cfg(cfg, k)
+    mesh = make_production_mesh(multi_pod=False)
+    lowered, kind = lower_cell(cfg, SHAPES[shape_name], mesh)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+
+    per_op = []
+    by_source = defaultdict(int)
+    for line in text.splitlines():
+        s = line.strip()
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in s:
+                head = s.split(f" {coll}(")[0]
+                nb = sum(_nbytes(dt, dims) for dt, dims in _SHAPE.findall(head))
+                m = _META.search(s)
+                src = m.group(1) if m else "?"
+                # strip the jit(...)/jvp noise, keep the tail of the op path
+                src_tail = "/".join(src.split("/")[-3:])
+                shapes = _SHAPE.findall(head)
+                shape_str = (f"{shapes[0][0]}[{shapes[0][1]}]" if shapes else "?")
+                per_op.append((nb, coll, src_tail))
+                by_source[(coll, src_tail, shape_str)] += nb
+                break
+
+    total = sum(nb for nb, _, _ in per_op)
+    print(f"{arch} × {shape_name} (k={k}, overrides={overrides}): "
+          f"{len(per_op)} collectives, {total/2**30:.3f} GiB/dev total")
+    print("\ntop sources:")
+    for (coll, src, shp), nb in sorted(by_source.items(), key=lambda x: -x[1])[:18]:
+        print(f"  {nb/2**30:8.3f} GiB  {coll:20s} {shp:28s} {src}")
+
+    a = analyze(lowered)
+    print(f"\nflops {a['flops']:.3e}  macro_bytes {a['macro_bytes']:.3e}  "
+          f"raw_bytes {a['bytes_accessed']:.3e}")
+    print("collectives by type:", {k: f"{v:.2e}" for k, v in
+                                   a["collective_bytes"].items()})
+
+
+if __name__ == "__main__":
+    main()

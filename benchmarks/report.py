@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from experiments/{dryrun,roofline}/*.json."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def _gib(n):
+    return n / 2**30
+
+
+def dryrun_table() -> str:
+    rows = []
+    header = ("| arch | shape | mesh | step | peak GiB/dev | args GiB/dev | "
+              "HLO flops/dev | HLO bytes/dev | coll bytes/dev | compile s |")
+    rows.append(header)
+    rows.append("|" + "---|" * 10)
+    for p in sorted((ROOT / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                        f"skip | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                        f"**FAILED** | — | — | — | — | — |")
+            continue
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step_kind']} | "
+            f"{_gib(m['peak_bytes']):.2f} | {_gib(m['argument_bytes']):.2f} | "
+            f"{r['flops']:.2e} | {r['bytes_accessed']:.2e} | "
+            f"{r['collective_bytes']['total']:.2e} | {r['compile_seconds']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(variant: str = "baseline") -> str:
+    rows = []
+    rows.append("| arch | shape | compute s | memory s | collective s | "
+                "dominant | MODEL/HLO flops | roofline frac |")
+    rows.append("|" + "---|" * 8)
+    for p in sorted((ROOT / "roofline").glob(f"*__{variant}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            tag = "skip" if r.get("status") == "skipped" else "**FAILED**"
+            rows.append(f"| {r['arch']} | {r['shape']} | {tag} | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f}ms | "
+            f"{r['memory_s']*1e3:.2f}ms | {r['collective_s']*1e3:.2f}ms | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def variant_comparison(arch: str, shape: str) -> str:
+    rows = ["| variant | compute s | memory s | collective s | dominant | roofline frac |",
+            "|" + "---|" * 6]
+    for p in sorted((ROOT / "roofline").glob(f"{arch}__{shape}__*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        rows.append(f"| {r['variant']} | {r['compute_s']*1e3:.2f}ms | "
+                    f"{r['memory_s']*1e3:.2f}ms | {r['collective_s']*1e3:.2f}ms | "
+                    f"{r['dominant']} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    what = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    if what == "dryrun":
+        print(dryrun_table())
+    elif what == "roofline":
+        print(roofline_table(sys.argv[2] if len(sys.argv) > 2 else "baseline"))
+    else:
+        print(variant_comparison(sys.argv[2], sys.argv[3]))

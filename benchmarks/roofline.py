@@ -1,0 +1,277 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh).
+
+Method
+------
+XLA's ``cost_analysis`` counts a ``while``-loop (scan) body ONCE, so the
+full-config scanned compile (the §Dry-run memory/shardability proof) cannot
+give total FLOPs.  Instead we lower the SAME step with the layer stack
+**unrolled** at 1 and 2 units and extrapolate affinely::
+
+    cost(U units) = cost(1) + (U - 1) * (cost(2) - cost(1))
+
+This is exact for every per-unit-affine quantity (matmul FLOPs, HBM bytes,
+collective bytes, optimizer/grad FLOPs) and attributes embedding/head/loss
+costs to the base term.  Attention inside the costing lowers uses the
+``unrolled`` blockwise implementation, so its FLOPs are fully visible too.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM/chip,
+~50 GB/s/link ICI.  cost_analysis of an SPMD executable is per-device, so
+
+    compute    = flops / peak_flops
+    memory     = bytes_accessed / hbm_bw
+    collective = collective_bytes / link_bw          (all per-chip, seconds)
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference);
+the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is
+"useful" (catches remat/redundancy waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link (ICI)
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+
+
+def _costing_cfg(cfg, k: int):
+    """Config with k units, unrolled stack, exact-cost attention."""
+    from repro.models.transformer import unit_pattern
+
+    unit = len(unit_pattern(cfg))
+    upd: Dict[str, Any] = dict(num_layers=unit * k, scan_layers=False,
+                               attn_impl="unrolled")
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = k
+    return dataclasses.replace(cfg, **upd)
+
+
+def _cost_of(cfg, shape, mesh) -> Dict[str, float]:
+    from repro.launch.dryrun import analyze, lower_cell
+
+    lowered, _ = lower_cell(cfg, shape, mesh)
+    a = analyze(lowered)
+    # memory term uses the TPU-fusion-adjusted traffic model (macro ops);
+    # the raw XLA-CPU "bytes accessed" (every unfused op at full size) is
+    # kept for reference — see dryrun.macro_bytes docstring.
+    return {"flops": a["flops"], "bytes": a["macro_bytes"],
+            "raw_bytes": a["bytes_accessed"],
+            "coll": float(a["collective_bytes"]["total"]),
+            "compile_seconds": a["compile_seconds"]}
+
+
+def extrapolated_cost(cfg, shape, mesh) -> Dict[str, float]:
+    """Total per-device cost via the 1-unit/2-unit affine extrapolation."""
+    from repro.models.transformer import num_units
+
+    u = num_units(cfg)
+    c1 = _cost_of(_costing_cfg(cfg, 1), shape, mesh)
+    if u == 1:
+        return {**c1, "per_unit_flops": c1["flops"], "units": 1}
+    c2 = _cost_of(_costing_cfg(cfg, 2), shape, mesh)
+    out = {}
+    for k in ("flops", "bytes", "raw_bytes", "coll"):
+        d = c2[k] - c1[k]
+        out[k] = c1[k] + (u - 1) * d
+        out[f"per_unit_{k}"] = d
+    out["units"] = u
+    out["compile_seconds"] = c1["compile_seconds"] + c2["compile_seconds"]
+    return out
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """Global useful FLOPs for one step of this cell."""
+    from repro.models.counting import param_count
+
+    n_active = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def ideal_bytes_per_dev(cfg, shape, devices: int) -> float:
+    """Decode ideal: the unavoidable HBM reads — every (active) parameter
+    once + the whole KV/state cache once, spread over the mesh."""
+    from repro.models.counting import param_count
+
+    param_bytes = param_count(cfg, active_only=True) * 2  # bf16
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        from repro.configs.base import SHAPES  # noqa: F401 (doc pointer)
+        from repro.launch.specs import input_specs
+
+        specs = input_specs(cfg, shape)
+        for leaf in __import__("jax").tree.leaves(specs["caches"]):
+            cache_bytes += leaf.size * leaf.dtype.itemsize
+    return (param_bytes + cache_bytes) / devices
+
+
+def roofline_terms(cost: Dict[str, float], devices: int, cfg, shape) -> Dict[str, Any]:
+    compute_s = cost["flops"] / PEAK_FLOPS
+    memory_s = cost["bytes"] / HBM_BW
+    coll_s = cost["coll"] / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    mf = model_flops_for_cell(cfg, shape) / devices
+    total = max(compute_s, memory_s, coll_s)
+    # roofline fraction = (hardware-limited ideal step time) / (bound implied
+    # by the compiled artifact).  Train/prefill are compute-ideal (MODEL_FLOPS
+    # at peak MXU); decode is memory-ideal (params+cache through HBM once).
+    if shape.kind == "decode":
+        ideal = ideal_bytes_per_dev(cfg, shape, devices) / HBM_BW
+    else:
+        ideal = mf / PEAK_FLOPS
+    return {
+        "devices": devices,
+        "kind": shape.kind,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "ideal_s": ideal,
+        "useful_flops_ratio": (mf / cost["flops"]) if cost["flops"] else 0.0,
+        "roofline_fraction": (ideal / total) if total else 0.0,
+    }
+
+
+def recompute_terms():
+    """Rewrite the derived terms in every stored JSON from its raw cost dict
+    (post-hoc metric changes without recompiling)."""
+    from repro.configs import SHAPES, get_config
+
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or "cost" not in r:
+            continue
+        cfg = get_config(r["arch"])
+        if r.get("overrides"):
+            cfg = dataclasses.replace(cfg, **r["overrides"])
+        shape = SHAPES[r["shape"]]
+        r.update(roofline_terms(r["cost"], r.get("devices", 256), cfg, shape))
+        p.write_text(json.dumps(r, indent=2))
+
+
+def run_cell(arch: str, shape_name: str, variant: str = "baseline",
+             overrides: Optional[Dict[str, Any]] = None,
+             force: bool = False) -> Dict[str, Any]:
+    """Roofline for one cell on the single-pod mesh.  ``variant`` names a
+    hillclimb configuration; ``overrides`` are ArchConfig field updates."""
+    from repro.configs import SHAPES, cell_is_runnable, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{variant}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    record: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "variant": variant, "overrides": overrides or {}}
+    runnable, why = cell_is_runnable(cfg, shape_name)
+    if not runnable:
+        record.update(status="skipped", reason=why)
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=False)
+    record["devices"] = mesh.size
+    try:
+        cost = extrapolated_cost(cfg, shape, mesh)
+        record["cost"] = cost
+        record.update(roofline_terms(cost, mesh.size, cfg, shape))
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        import traceback
+
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-3000:])
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def summarize() -> str:
+    rows = []
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        rows.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['variant']:18s} "
+            f"comp {r['compute_s']*1e3:9.2f}ms  mem {r['memory_s']*1e3:9.2f}ms  "
+            f"coll {r['collective_s']*1e3:9.2f}ms  dom={r['dominant']:10s} "
+            f"useful={r['useful_flops_ratio']:.3f} roofline={r['roofline_fraction']:.3f}")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    import argparse
+
+    from repro.configs import ARCH_NAMES, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override key=value (hillclimb lever)")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--recompute", action="store_true",
+                    help="rewrite derived terms from stored costs (no compiles)")
+    args = ap.parse_args(argv)
+
+    if args.recompute:
+        recompute_terms()
+        print(summarize())
+        return
+    if args.summary:
+        print(summarize())
+        return
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), v)
+        if isinstance(overrides[k], str):
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                pass
+
+    archs = ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            r = run_cell(arch, shape, args.variant, overrides or None,
+                         force=args.force)
+            if r["status"] == "ok":
+                print(f"[ok]   {arch} × {shape} × {args.variant}: "
+                      f"dom={r['dominant']} comp={r['compute_s']*1e3:.1f}ms "
+                      f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+                      f"roofline={r['roofline_fraction']:.3f}", flush=True)
+            elif r["status"] == "skipped":
+                print(f"[skip] {arch} × {shape}: {r['reason']}", flush=True)
+            else:
+                print(f"[FAIL] {arch} × {shape}: {r['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark suite entrypoint: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits ``table,label,value`` CSV lines (each module also prints richer rows).
+The roofline harness (benchmarks/roofline.py) is run separately — it needs
+the 512-device XLA flag and hour-scale compiles; see EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import brownian, clipping, convergence, gradient_error, solver_speed
+
+SUITES = {
+    "gradient_error": gradient_error.main,   # paper Fig. 2 / Table 6
+    "solver_speed": solver_speed.main,       # paper Tables 1/4/5 (speed)
+    "brownian": brownian.main,               # paper Table 2 / Tables 7-10
+    "clipping": clipping.main,               # paper Tables 3/11 (speed)
+    "convergence": convergence.main,         # paper Figs. 5/6 (App. D.4)
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced reps/paths for CI-scale runs")
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(SUITES)
+    failures = 0
+    for name in names:
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            SUITES[name](quick=args.quick)
+            print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            import traceback
+
+            traceback.print_exc()
+            print(f"=== {name} FAILED: {e} ===", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

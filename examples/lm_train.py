@@ -1,0 +1,54 @@
+"""End-to-end LM training driver on a ~20M-param tinyllama-family config.
+
+Exercises the full production stack on CPU: config system -> model zoo ->
+train_step (AdamW + cosine + grad clip) -> deterministic data pipeline ->
+atomic checkpointing -> auto-resume.  The same code path scales to the
+256/512-chip meshes via launch/dryrun.py (AOT-verified) and launch/train.py.
+
+Run:  PYTHONPATH=src python examples/lm_train.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args(argv)
+
+    # a mid-size member of the tinyllama family (~20M params): real vocab,
+    # reduced width/depth — the same ArchConfig schema as the full 1.1B.
+    t0 = time.time()
+    import repro.configs.tinyllama_1_1b as tl
+
+    cfg = dataclasses.replace(
+        tl.CONFIG, num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+        head_dim=32, d_ff=704, dtype=jax.numpy.float32,
+        scan_layers=False, remat=False)
+
+    # train() resolves configs by name; monkey-patch a local registry entry
+    from repro import configs as cfgmod
+
+    cfgmod.REGISTRY["tinyllama-mid"] = cfg
+    params, losses = train(
+        arch="tinyllama-mid", steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, smoke=False, seed=0,
+        peak_lr=1e-3)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[lm_train] {n/1e6:.1f}M params; loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f} in {args.steps} steps ({time.time()-t0:.0f}s)")
+    assert losses[-1] < losses[0], "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

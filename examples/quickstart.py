@@ -1,0 +1,71 @@
+"""Quickstart: the paper's three contributions in ~60 lines.
+
+1. Solve a Stratonovich SDE with the **reversible Heun** method.
+2. Backprop through it with the **O(1)-memory exact adjoint** and check the
+   gradients equal discretise-then-optimise to float precision.
+3. Sample Brownian increments with the **Brownian Interval** — exact,
+   cache-backed, reconstructible on the backward pass.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.adjoint import reversible_heun_solve
+from repro.core.brownian import BrownianPath
+from repro.core.brownian_interval import BrownianInterval
+from repro.core.solvers import sde_solve
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    k1, k2, kz, kw = jax.random.split(key, 4)
+
+    # --- a small Neural SDE: dX = μ_θ(X) dt + σ_θ(X) ∘ dW -------------------
+    params = {"mu": nn.mlp_init(k1, [4, 32, 4], dtype=jnp.float64),
+              "sigma": nn.mlp_init(k2, [4, 32, 4], dtype=jnp.float64)}
+    drift = lambda p, t, x: nn.mlp(p["mu"], x, nn.lipswish, jnp.tanh)
+    diffusion = lambda p, t, x: 0.2 * nn.mlp(p["sigma"], x, nn.lipswish, jnp.tanh)
+
+    x0 = jax.random.normal(kz, (8, 4), jnp.float64)
+    bm = BrownianPath(kw, 0.0, 1.0, (8, 4), jnp.float64)   # counter-based, exact
+
+    # --- 1. solve ------------------------------------------------------------
+    traj = reversible_heun_solve(drift, diffusion, params, x0, bm, 0.0, 1.0,
+                                 64, "diagonal")
+    print(f"solved: trajectory {traj.shape}, X_T mean {float(traj[-1].mean()):+.4f}")
+
+    # --- 2. exact gradients ----------------------------------------------------
+    def loss_exact(p):
+        t = reversible_heun_solve(drift, diffusion, p, x0, bm, 0.0, 1.0, 64, "diagonal")
+        return jnp.mean(t[-1] ** 2)
+
+    def loss_dto(p):  # autodiff through the solver internals (O(N) memory)
+        t = sde_solve(drift, diffusion, p, x0, bm, 0.0, 1.0, 64,
+                      solver="reversible_heun")
+        return jnp.mean(t[-1] ** 2)
+
+    g1 = jax.grad(loss_exact)(params)
+    g2 = jax.grad(loss_dto)(params)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+    print(f"exact adjoint vs discretise-then-optimise: max |Δgrad| = {err:.2e}"
+          f"  (float64 roundoff — the paper's Fig. 2)")
+
+    # --- 3. Brownian Interval -------------------------------------------------
+    bi = BrownianInterval(0.0, 1.0, shape=(3,), seed=42)
+    w_ab = bi(0.2, 0.7)
+    w_half = bi(0.2, 0.45) + bi(0.45, 0.7)   # consistency under refinement
+    print(f"Brownian Interval: W(0.2,0.7) = {w_ab.round(4)}; "
+          f"additivity error {np.abs(w_ab - w_half).max():.2e}")
+    hits, misses = bi.cache_stats
+    print(f"LRU cache: {hits} hits / {misses} misses")
+
+
+if __name__ == "__main__":
+    main()

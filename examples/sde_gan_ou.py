@@ -1,0 +1,104 @@
+"""SDE-GAN on the time-dependent Ornstein-Uhlenbeck dataset (paper §5/F.7).
+
+Trains the generator/discriminator pair with the paper's recipe:
+Stratonovich reversible Heun + exact adjoint, Adadelta, hard Lipschitz
+clipping + LipSwish (NO gradient penalty), stochastic weight averaging.
+Reports signature-MMD against held-out data.
+
+Run:  PYTHONPATH=src python examples/sde_gan_ou.py --steps 300
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import losses
+from repro.core.clipping import clip_lipschitz
+from repro.core.sde import (NeuralSDEConfig, discriminator_init, gan_losses,
+                            generator_init, generator_sample)
+from repro.data.synthetic import ou_process
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--constraint", choices=("clip", "gp"), default="clip",
+                    help="'clip' = paper §5; 'gp' = WGAN-GP baseline")
+    ap.add_argument("--solver", default="reversible_heun",
+                    choices=("reversible_heun", "midpoint"))
+    args = ap.parse_args(argv)
+
+    cfg = NeuralSDEConfig(
+        data_dim=1, hidden_dim=16, noise_dim=4, width=32, num_steps=31,
+        solver=args.solver, exact_adjoint=args.solver == "reversible_heun")
+    key = jax.random.PRNGKey(0)
+    params = {"gen": generator_init(key, cfg),
+              "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
+    data_key = jax.random.fold_in(key, 2)
+
+    gi, gu = optim.adadelta(lr=1.0)
+    di, du = optim.adadelta(lr=1.0)
+    g_state, d_state = gi(params["gen"]), di(params["disc"])
+
+    @jax.jit
+    def train_step(params, g_state, d_state, k):
+        y_real = ou_process(jax.random.fold_in(k, 0), args.batch, 32)
+
+        def d_loss(disc):
+            p = {"gen": params["gen"], "disc": disc}
+            _, dl, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, args.batch)
+            if args.constraint == "gp":
+                from repro.core.sde import gradient_penalty
+
+                fake = generator_sample(params["gen"], cfg,
+                                        jax.random.fold_in(k, 2), args.batch)
+                dl = dl + 10.0 * gradient_penalty(disc, cfg, jax.random.fold_in(k, 3),
+                                                  y_real, fake)
+            return dl
+
+        def g_loss(gen):
+            p = {"gen": gen, "disc": params["disc"]}
+            gl, _, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, args.batch)
+            return gl
+
+        dg = jax.grad(d_loss)(params["disc"])
+        upd, d_state2 = du(dg, d_state, params["disc"])
+        disc = optim.apply_updates(params["disc"], upd)
+        if args.constraint == "clip":
+            disc = clip_lipschitz(disc)           # the paper's hard projection
+
+        gg = jax.grad(g_loss)(params["gen"])
+        upd, g_state2 = gu(gg, g_state, params["gen"])
+        gen = optim.apply_updates(params["gen"], upd)
+        return {"gen": gen, "disc": disc}, g_state2, d_state2
+
+    swa, n_avg = None, 0
+    t0 = time.time()
+    for step in range(args.steps):
+        params, g_state, d_state = train_step(params, g_state, d_state,
+                                              jax.random.fold_in(data_key, step))
+        if step >= args.steps // 2:               # SWA over the latter 50%
+            swa = params["gen"] if swa is None else optim.swa_update(swa, params["gen"], n_avg)
+            n_avg += 1
+        if step % 50 == 0:
+            y_real = ou_process(jax.random.fold_in(key, 777), 256, 32)
+            fake = generator_sample(params["gen"], cfg, jax.random.fold_in(key, 778), 256)
+            mmd = float(losses.signature_mmd(y_real, fake))
+            print(f"step {step:4d}  sig-MMD {mmd:.4f}  ({time.time()-t0:.0f}s)",
+                  flush=True)
+
+    gen_final = swa if swa is not None else params["gen"]
+    y_real = ou_process(jax.random.fold_in(key, 888), 512, 32)
+    fake = generator_sample(gen_final, cfg, jax.random.fold_in(key, 889), 512)
+    mmd = float(losses.signature_mmd(y_real, fake))
+    print(f"final ({args.constraint}, {args.solver}): sig-MMD {mmd:.4f}, "
+          f"total {time.time()-t0:.0f}s")
+    return mmd
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — 'Efficient and Accurate Gradients for Neural SDEs' as a
+production-grade multi-pod JAX framework.
+
+Paper contributions (repro.core):
+  * reversible Heun solver + O(1)-memory exact adjoint
+  * Brownian Interval (host reference) / BrownianPath (TPU-native)
+  * SDE-GAN training via Lipschitz clipping + LipSwish
+
+Framework substrates: repro.nn, repro.models (10-arch zoo), repro.optim,
+repro.data, repro.distributed, repro.checkpoint, repro.kernels (Pallas),
+repro.launch (mesh / dryrun / train / serve).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,101 @@
+"""Sharded, atomic, step-granular checkpointing.
+
+Layout::
+
+    <dir>/step_<N>/
+        shard_<host>.npz     # one file per host process (host 0 here)
+        MANIFEST.json        # written LAST -> commit marker
+
+A checkpoint is valid iff its MANIFEST exists; a crash mid-write leaves no
+manifest and the directory is ignored (and garbage-collected on the next
+save).  ``restore_checkpoint`` finds the newest valid step — the auto-resume
+path of launch/train.py.  Leaves are addressed by their pytree key-path so a
+restore is robust to dict-ordering changes.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_names(tree) -> Tuple[list, Any]:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(path) for path, _ in leaves_with_paths]
+    leaves = [leaf for _, leaf in leaves_with_paths]
+    return names, (leaves, treedef)
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, host_id: int = 0,
+                    keep: int = 3) -> Path:
+    """Atomically persist ``tree`` at ``step``; prunes to ``keep`` newest."""
+    ckpt_dir = Path(ckpt_dir)
+    step_dir = ckpt_dir / f"step_{step:012d}"
+    tmp_dir = ckpt_dir / f".tmp_step_{step:012d}"
+    if tmp_dir.exists():
+        shutil.rmtree(tmp_dir)
+    tmp_dir.mkdir(parents=True)
+
+    names, (leaves, _) = _leaf_names(tree)
+    arrays = {n: np.asarray(l) for n, l in zip(names, leaves)}
+    np.savez(tmp_dir / f"shard_{host_id}.npz", **arrays)
+    manifest = {
+        "step": step,
+        "num_hosts": 1,
+        "leaves": {n: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for n, a in arrays.items()},
+    }
+    (tmp_dir / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
+    if step_dir.exists():
+        shutil.rmtree(step_dir)
+    tmp_dir.rename(step_dir)  # atomic commit
+
+    # prune: keep the newest `keep` valid checkpoints + drop stale tmp dirs
+    valid = sorted(d for d in ckpt_dir.glob("step_*")
+                   if (d / "MANIFEST.json").exists())
+    for d in valid[:-keep]:
+        shutil.rmtree(d)
+    for d in ckpt_dir.glob(".tmp_step_*"):
+        shutil.rmtree(d)
+    return step_dir
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    valid = sorted(d for d in ckpt_dir.glob("step_*")
+                   if (d / "MANIFEST.json").exists())
+    if not valid:
+        return None
+    return int(valid[-1].name.split("_")[1])
+
+
+def restore_checkpoint(ckpt_dir, like_tree, step: Optional[int] = None,
+                       host_id: int = 0):
+    """Restore into the structure (and dtypes) of ``like_tree``.
+
+    Returns (tree, step).  Raises FileNotFoundError when nothing valid exists.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {ckpt_dir}")
+    step_dir = ckpt_dir / f"step_{step:012d}"
+    manifest = json.loads((step_dir / "MANIFEST.json").read_text())
+    data = np.load(step_dir / f"shard_{host_id}.npz")
+
+    names, (leaves, treedef) = _leaf_names(like_tree)
+    restored = []
+    for n, like in zip(names, leaves):
+        arr = data[n]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"checkpoint leaf {n}: shape {arr.shape} != {like.shape}")
+        restored.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest["step"]

@@ -1,0 +1,122 @@
+"""Architecture config schema + input-shape sets for the assigned pool."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"
+    ffn: str = "swiglu"              # swiglu | gelu
+    rope_theta: float = 10_000.0
+    dtype: object = jnp.bfloat16
+
+    # --- attention flavour
+    attention: str = "gqa"           # gqa | mla
+    # MLA (MiniCPM3 / DeepSeek-style)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1               # MoE FFN every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+
+    # --- hybrid / SSM
+    ssm: bool = False                # pure-SSM stack (mamba2)
+    attn_every: int = 0              # hybrid: attention layer every k-th (jamba: 8)
+    ssm_state: int = 128
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    # --- encoder-decoder
+    encoder_layers: int = 0          # >0 => enc-dec; num_layers is decoder depth
+
+    # --- multimodal stub frontend
+    frontend: Optional[str] = None   # "patch" (vlm) | "frame" (audio)
+    frontend_len: int = 0            # prefix length supplied as embeddings
+
+    # --- execution knobs (perf levers; see EXPERIMENTS.md §Perf)
+    scan_layers: bool = True
+    remat: bool = True
+    remat_policy: str = "full"         # "full" | "collectives" (save post-AR
+    #   activations so the backward never re-runs TP all-reduces; §Perf C2)
+    reversible_residual: bool = False  # beyond-paper: reversible-Heun layer stack
+    sequence_parallel: bool = False    # shard residual-stream seq dim over 'model'
+    attn_mha_tp: bool = True           # repeat K/V to Hq when Hkv % tp != 0
+    #   (clean head-sharding; found in §Perf iteration 1 — see EXPERIMENTS.md)
+    attn_impl: str = "scan"            # "scan" (O(1) HLO) | "unrolled" (exact cost_analysis)
+    attn_block_q: int = 1024
+    attn_block_k: int = 1024
+    adam_dtype: str = "float32"        # "bfloat16" halves optimizer-state HBM
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total; for MoE also see active_param_count)."""
+        from ..models.counting import param_count
+
+        return param_count(self)
+
+    def active_param_count(self) -> int:
+        from ..models.counting import param_count
+
+        return param_count(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic sequence mixing; decode with a full KV cache
+# is linear per token but the brief assigns it only to SSM/hybrid archs.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_is_runnable(arch: "ArchConfig", shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and arch.family not in LONG_CONTEXT_FAMILIES:
+        return False, "long_500k skipped: full-attention arch (see DESIGN.md §Arch-applicability)"
+    return True, ""

@@ -1,0 +1,22 @@
+"""The paper's primary contributions as composable JAX modules."""
+
+from .adjoint import continuous_adjoint_solve, reversible_heun_solve  # noqa: F401
+from .brownian import (  # noqa: F401
+    BrownianPath,
+    VirtualBrownianTree,
+    brownian_increments,
+    davie_levy_area,
+    space_time_levy_area,
+)
+from .brownian_interval import BrownianInterval, HostVirtualBrownianTree  # noqa: F401
+from .clipping import clip_lipschitz, clip_linear, clip_mlp, lipschitz_bound_mlp  # noqa: F401
+from .losses import signature, signature_mmd, time_augment, wasserstein_losses  # noqa: F401
+from .paths import LinearPathControl  # noqa: F401
+from .solvers import (  # noqa: F401
+    NFE_PER_STEP,
+    RevHeunState,
+    ode_solve,
+    reversible_heun_reverse_step,
+    reversible_heun_step,
+    sde_solve,
+)

@@ -1,0 +1,249 @@
+"""The Brownian Interval — faithful host-side implementation (paper §4, App. E).
+
+A lazily grown binary tree of ``(interval, seed)`` nodes.  Queries return the
+exact increment ``W_{s,t}``; the tree aligns itself with query points, so no
+discretisation error is ever introduced (unlike the Virtual Brownian Tree).
+Three of the paper's engineering points are reproduced:
+
+* **splittable PRNG** — each child's seed is derived deterministically from
+  its parent's (Salmon et al. [34] / Claessen & Pałka [35]); we use numpy's
+  Philox counter-based generator keyed by the node seed.
+* **LRU cache on computed increments** — queries adjacent to recent queries
+  (the SDE-solver access pattern) hit the cache and cost amortised O(1).
+* **search hints** — ``traverse`` starts from the most recent node, not the
+  root (App. E "Search hints"), and an optional **pre-planted dyadic tree**
+  (App. E "Backward pass") bounds recomputation on right-to-left sweeps.
+
+This module is intentionally host-side Python: it is the *reference /
+benchmark* implementation used to reproduce Table 2.  The in-graph TPU path
+(:class:`repro.core.brownian.BrownianPath`) achieves the same
+exactness-without-storage via JAX's own counter-based splittable PRNG; see
+DESIGN.md §2 for why the LRU cache dissolves on TPU.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["BrownianInterval", "HostVirtualBrownianTree"]
+
+
+class _Node:
+    __slots__ = ("a", "b", "seed", "parent", "left", "right")
+
+    def __init__(self, a: float, b: float, seed: int, parent: Optional["_Node"]):
+        self.a = a
+        self.b = b
+        self.seed = seed
+        self.parent = parent
+        self.left: Optional[_Node] = None
+        self.right: Optional[_Node] = None
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"Node([{self.a}, {self.b}])"
+
+
+def _split_seed(seed: int) -> Tuple[int, int]:
+    """Deterministic splittable seed derivation (counter-based hash)."""
+    rng = np.random.Philox(key=seed & ((1 << 64) - 1))
+    child = np.random.Generator(rng).integers(0, 2**63 - 1, size=2)
+    return int(child[0]), int(child[1])
+
+
+class _LRU:
+    """Fixed-size LRU cache: node-id -> increment array."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, k: int):
+        v = self._d.get(k)
+        if v is not None:
+            self.hits += 1
+            self._d.move_to_end(k)
+        else:
+            self.misses += 1
+        return v
+
+    def put(self, k: int, v: np.ndarray):
+        self._d[k] = v
+        self._d.move_to_end(k)
+        if len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+
+class BrownianInterval:
+    """Exact sampling/reconstruction of Brownian increments ``W_{s,t}``.
+
+    Parameters
+    ----------
+    t0, t1 : global interval.
+    shape  : shape of each increment (e.g. ``(batch, w_dim)``).
+    seed   : global seed (root of the splittable-PRNG tree).
+    cache_size : LRU cache entries (the paper's "fixed and constant" GPU cost).
+    preplant_dt : if given, pre-plant a dyadic tree whose leaves are no larger
+        than ``4/5 * preplant_dt * cache_size`` (App. E backward-pass remedy),
+        making right-to-left sweeps O(n log n) instead of O(n^2).
+    """
+
+    def __init__(
+        self,
+        t0: float,
+        t1: float,
+        shape: Tuple[int, ...],
+        seed: int = 0,
+        cache_size: int = 128,
+        preplant_dt: Optional[float] = None,
+        dtype=np.float64,
+    ):
+        assert t1 > t0
+        self.t0, self.t1 = float(t0), float(t1)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self._root = _Node(self.t0, self.t1, seed, None)
+        self._cache = _LRU(cache_size)
+        self._hint: _Node = self._root
+        if preplant_dt is not None:
+            leaf = max(preplant_dt * cache_size * 0.8, 1e-12)
+            self._preplant(self._root, leaf)
+
+    # -- public API ----------------------------------------------------------
+    def __call__(self, s: float, t: float) -> np.ndarray:
+        """Return the exact increment ``W_t - W_s``."""
+        if not (self.t0 <= s < t <= self.t1):
+            raise ValueError(f"query [{s}, {t}] outside [{self.t0}, {self.t1}]")
+        nodes = self._traverse(self._hint, s, t)
+        self._hint = nodes[-1]
+        out = np.zeros(self.shape, self.dtype)
+        for n in nodes:
+            out += self._sample(n)
+        return out
+
+    @property
+    def cache_stats(self) -> Tuple[int, int]:
+        return self._cache.hits, self._cache.misses
+
+    # -- Algorithm 3: sample -------------------------------------------------
+    def _base_normal(self, seed: int, scale: float) -> np.ndarray:
+        g = np.random.Generator(np.random.Philox(key=seed & ((1 << 64) - 1)))
+        return g.normal(0.0, scale, size=self.shape).astype(self.dtype, copy=False)
+
+    def _bridge(self, a: float, b: float, x: float, w_parent: np.ndarray, seed: int) -> np.ndarray:
+        """Lévy bridge (paper eq. (8)): sample W_{a,x} | W_{a,b} = w_parent."""
+        mean = (x - a) / (b - a) * w_parent
+        std = np.sqrt((b - x) * (x - a) / (b - a))
+        g = np.random.Generator(np.random.Philox(key=seed & ((1 << 64) - 1)))
+        return mean + std * g.standard_normal(self.shape).astype(self.dtype, copy=False)
+
+    def _sample(self, node: _Node) -> np.ndarray:
+        cached = self._cache.get(id(node))
+        if cached is not None:
+            return cached
+        if node is self._root:
+            out = self._base_normal(node.seed, np.sqrt(self.t1 - self.t0))
+        else:
+            parent = node.parent
+            w_parent = self._sample(parent)
+            if node is parent.right:
+                # W_{mid, b} = W_{a, b} - W_{a, mid}
+                left = parent.left
+                w_left = self._bridge(parent.a, parent.b, left.b, w_parent, left.seed)
+                out = w_parent - w_left
+            else:
+                out = self._bridge(parent.a, parent.b, node.b, w_parent, node.seed)
+        self._cache.put(id(node), out)
+        return out
+
+    # -- Algorithm 4: traverse -------------------------------------------------
+    def _bisect(self, node: _Node, x: float) -> None:
+        s_left, s_right = _split_seed(node.seed)
+        node.left = _Node(node.a, x, s_left, node)
+        node.right = _Node(x, node.b, s_right, node)
+
+    def _traverse(self, start: _Node, c: float, d: float) -> List[_Node]:
+        nodes: List[_Node] = []
+        # Iterative (trampolined) version of Algorithm 4 — the paper notes
+        # recursion depth errors otherwise ("Recursion errors", App. E).
+        stack: List[Tuple[_Node, float, float]] = [(start, c, d)]
+        while stack:
+            node, lo, hi = stack.pop()
+            # outside our jurisdiction — pass to parent
+            while lo < node.a or hi > node.b:
+                node = node.parent
+            if lo == node.a and hi == node.b:
+                nodes.append(node)
+                continue
+            if node.left is None:  # leaf
+                if node.a == lo:
+                    self._bisect(node, hi)
+                    nodes.append(node.left)
+                else:
+                    self._bisect(node, lo)
+                    stack.append((node.right, lo, hi))
+                continue
+            m = node.left.b
+            if hi <= m:
+                stack.append((node.left, lo, hi))
+            elif lo >= m:
+                stack.append((node.right, lo, hi))
+            else:
+                # split across both children; keep left-to-right output order
+                stack.append((node.right, m, hi))
+                stack.append((node.left, lo, m))
+        return nodes
+
+    def _preplant(self, node: _Node, leaf_size: float) -> None:
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if (n.b - n.a) <= leaf_size:
+                continue
+            self._bisect(n, 0.5 * (n.a + n.b))
+            stack.extend((n.left, n.right))
+
+
+class HostVirtualBrownianTree:
+    """Host-side Virtual Brownian Tree baseline (Li et al. [15]).
+
+    Every query runs the full ``O(log(1/eps))`` dyadic descent from the root —
+    no cache, no tree growth, approximate at resolution ``eps``.
+    """
+
+    def __init__(self, t0: float, t1: float, shape, seed: int = 0, eps: float = 1e-5, dtype=np.float64):
+        self.t0, self.t1 = float(t0), float(t1)
+        self.shape = tuple(shape)
+        self.eps = eps
+        self.seed = seed
+        self.dtype = dtype
+        import math
+
+        self._depth = max(1, int(math.ceil(math.log2((t1 - t0) / eps))))
+
+    def _w(self, t: float) -> np.ndarray:
+        g = np.random.Generator(np.random.Philox(key=self.seed))
+        w_a = np.zeros(self.shape, self.dtype)
+        w_b = g.standard_normal(self.shape).astype(self.dtype) * np.sqrt(self.t1 - self.t0)
+        a, b = self.t0, self.t1
+        seed = self.seed
+        for _ in range(self._depth):
+            m = 0.5 * (a + b)
+            s_left, s_right = _split_seed(seed)
+            gm = np.random.Generator(np.random.Philox(key=s_left))
+            std = np.sqrt((b - m) * (m - a) / (b - a))
+            w_m = 0.5 * (w_a + w_b) + std * gm.standard_normal(self.shape).astype(self.dtype)
+            if t <= m:
+                b, w_b, seed = m, w_m, s_left
+            else:
+                a, w_a, seed = m, w_m, s_right
+            if (b - a) <= self.eps:
+                break
+        return w_a
+
+    def __call__(self, s: float, t: float) -> np.ndarray:
+        return self._w(t) - self._w(s)

@@ -1,0 +1,51 @@
+"""SDE-GAN Lipschitz control without gradient penalty (paper §5).
+
+The discriminator CDE's vector fields must have Lipschitz constant ≤ 1 —
+the recurrent structure amplifies any λ > 1 to O(λ^T).  The paper's recipe:
+
+* **hard clipping**: each linear map's entries are clipped into
+  ``[-1/fan_in, 1/fan_in]`` after every optimiser update, enforcing
+  ``‖Ax‖∞ ≤ ‖x‖∞``;
+* **LipSwish** activations (Lipschitz 1, C²-smooth — required for solver
+  convergence, Appendix D).
+
+Applied as a *functional transform* on the parameter pytree (JAX has no
+in-place ``clamp_``), keyed on the MLP parameter naming of
+:mod:`repro.nn.core`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_linear(params: dict) -> dict:
+    """Clip one Linear's weight entries to [-1/fan_in, 1/fan_in]; bias passes
+    through (adding a bias has Lipschitz constant one, paper §5)."""
+    w = params["w"]
+    bound = 1.0 / w.shape[0]
+    out = dict(params)
+    out["w"] = jnp.clip(w, -bound, bound)
+    return out
+
+
+def clip_mlp(params: dict) -> dict:
+    return {"layers": [clip_linear(p) for p in params["layers"]]}
+
+
+def clip_lipschitz(tree, mlp_names=("f", "g", "xi")):
+    """Clip the named discriminator MLPs inside a parameter tree."""
+    out = dict(tree)
+    for name in mlp_names:
+        if name in out:
+            out[name] = clip_mlp(out[name])
+    return out
+
+
+def lipschitz_bound_mlp(params: dict) -> float:
+    """Upper bound on the MLP's ∞-norm Lipschitz constant (∏ max row-ℓ1)."""
+    bound = 1.0
+    for p in params["layers"]:
+        bound = bound * jnp.max(jnp.sum(jnp.abs(p["w"]), axis=0))
+    return bound

@@ -1,0 +1,80 @@
+"""Test metrics and losses (paper Appendix F.1).
+
+The headline evaluation metric is the signature-feature MMD: the feature map
+ψ is the depth-``m`` truncated path signature of the time-augmented path
+(Király & Oberhauser [69]); MMD = ‖E ψ(P) − E ψ(Q)‖ (paper F.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _segment_exp(dy, depth: int):
+    """Truncated signature of a linear segment: exp⊗(dy) levels 1..depth.
+
+    Level k is ``dy^⊗k / k!`` with shape ``batch + (d,)*k``.
+    """
+    d = dy.shape[-1]
+    batch = dy.shape[:-1]
+    levels = [dy]
+    for k in range(2, depth + 1):
+        prev = levels[-1]  # batch + (d,)*(k-1)
+        nxt = prev[..., None] * dy.reshape(batch + (1,) * (k - 1) + (d,)) / k
+        levels.append(nxt)
+    return levels
+
+
+def signature(path: jax.Array, depth: int = 3) -> jax.Array:
+    """Depth-``depth`` truncated signature of ``path`` (T+1, ..., d).
+
+    Chen's relation over segments: S ← S ⊗ exp(Δy).  Returns the flattened
+    concatenation of levels 1..depth, shape (..., d + d² + … + d^depth).
+    """
+    d = path.shape[-1]
+    dys = path[1:] - path[:-1]  # (T, ..., d)
+    batch_shape = path.shape[1:-1]
+
+    def init_levels():
+        return [jnp.zeros(batch_shape + (d,) * k, path.dtype) for k in range(1, depth + 1)]
+
+    def body(S, dy):
+        E = _segment_exp(dy, depth)
+        out = []
+        for k in range(1, depth + 1):
+            # level k of S ⊗ E:  E_k + S_k + Σ_{i=1..k-1} S_i ⊗ E_{k-i}
+            acc = E[k - 1] + S[k - 1]
+            for i in range(1, k):
+                a = S[i - 1].reshape(batch_shape + (d,) * i + (1,) * (k - i))
+                b = E[k - i - 1].reshape(batch_shape + (1,) * i + (d,) * (k - i))
+                acc = acc + a * b
+            out.append(acc)
+        return out, None
+
+    S, _ = lax.scan(body, init_levels(), dys)
+    flat = [s.reshape(batch_shape + (-1,)) for s in S]
+    return jnp.concatenate(flat, -1)
+
+
+def time_augment(ys: jax.Array, t1: float = 1.0) -> jax.Array:
+    """Prepend a time channel: (T+1, ..., y) -> (T+1, ..., 1+y)."""
+    T = ys.shape[0] - 1
+    ts = jnp.linspace(0.0, t1, T + 1, dtype=ys.dtype)
+    tt = jnp.broadcast_to(ts[(slice(None),) + (None,) * (ys.ndim - 1)], ys.shape[:-1] + (1,))
+    return jnp.concatenate([tt, ys], -1)
+
+
+def signature_mmd(y_p: jax.Array, y_q: jax.Array, depth: int = 3) -> jax.Array:
+    """MMD between two path samples (T+1, batch, y) with signature features."""
+    fp = signature(time_augment(y_p), depth)
+    fq = signature(time_augment(y_q), depth)
+    diff = jnp.mean(fp, axis=0) - jnp.mean(fq, axis=0)
+    return jnp.sqrt(jnp.sum(diff * diff) + 1e-12)
+
+
+def wasserstein_losses(fake_score, real_score):
+    gen_loss = -jnp.mean(fake_score)
+    disc_loss = jnp.mean(fake_score) - jnp.mean(real_score)
+    return gen_loss, disc_loss

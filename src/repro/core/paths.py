@@ -1,0 +1,52 @@
+"""Control paths for CDEs (the SDE-GAN discriminator consumes a path, eq. (2)).
+
+Anything exposing ``increment(n, num_steps)`` can drive a solver — Brownian
+motion (:class:`repro.core.brownian.BrownianPath`) or an observed/generated
+data path interpolated piecewise-linearly (paper §2.3: "equation (2) may be
+evaluated on an interpolation of the observed data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LinearPathControl:
+    """Piecewise-linear interpolation of a discrete series ``ys`` (T+1, ..., d).
+
+    ``increment(n, N)`` with ``N == T`` returns ``ys[n+1] - ys[n]`` — the
+    control increment ``dY`` a CDE solver consumes on step ``n``.
+    """
+
+    ys: jax.Array  # (T+1, ..., d), time leading
+
+    def tree_flatten(self):
+        return (self.ys,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(ys=children[0])
+
+    def increment(self, n, num_steps: int):
+        T = self.ys.shape[0] - 1
+        if num_steps == T:
+            return jax.lax.dynamic_index_in_dim(self.ys, n + 1, 0, keepdims=False) - \
+                jax.lax.dynamic_index_in_dim(self.ys, n, 0, keepdims=False)
+        # re-gridding: num_steps steps over the same [0, 1] span
+        frac0 = n / num_steps * T
+        frac1 = (n + 1) / num_steps * T
+        return self._eval(frac1) - self._eval(frac0)
+
+    def _eval(self, f):
+        T = self.ys.shape[0] - 1
+        f = jnp.clip(f, 0, T)
+        i0 = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, T - 1)
+        w = f - i0
+        y0 = jax.lax.dynamic_index_in_dim(self.ys, i0, 0, keepdims=False)
+        y1 = jax.lax.dynamic_index_in_dim(self.ys, i0 + 1, 0, keepdims=False)
+        return y0 * (1 - w) + y1 * w

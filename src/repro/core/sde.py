@@ -1,0 +1,347 @@
+"""Neural SDE models (paper §2): generator, SDE-GAN, Latent SDE.
+
+Follows the paper's "certain minimal amount of structure" (eq. (1)):
+
+    X_0 = ζ_θ(V),   dX_t = μ_θ(t, X_t) dt + σ_θ(t, X_t) ∘ dW_t,   Y_t = ℓ_θ(X_t)
+
+with ζ_θ, μ_θ, σ_θ MLPs and ℓ_θ affine.  The SDE-GAN discriminator is the
+Neural CDE of eq. (2); generator+discriminator are solved as a *single* joint
+SDE so the Wasserstein loss is a function of the terminal state and the
+reversible-Heun exact adjoint applies end-to-end (paper §2.4: "the loss is an
+integral ... computed as part of Z in a single SDE solve").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from .adjoint import reversible_heun_solve
+from .brownian import BrownianPath
+from .paths import LinearPathControl
+from .solvers import sde_solve
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuralSDEConfig:
+    data_dim: int = 1          # y
+    hidden_dim: int = 16       # x
+    noise_dim: int = 4         # w
+    initial_noise_dim: int = 4  # v
+    width: int = 32
+    depth: int = 1
+    disc_hidden_dim: int = 16  # h (discriminator CDE state)
+    disc_width: int = 32
+    disc_depth: int = 1
+    num_steps: int = 32
+    t1: float = 1.0
+    solver: str = "reversible_heun"
+    exact_adjoint: bool = True
+    dtype: object = jnp.float32
+
+
+def _tcat(t, z):
+    tt = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    return jnp.concatenate([tt, z], -1)
+
+
+# =============================================================================
+# Generator
+# =============================================================================
+
+
+def generator_init(key, cfg: NeuralSDEConfig):
+    kz, km, ks, kl = jax.random.split(key, 4)
+    hid = [cfg.width] * cfg.depth
+    d = cfg.dtype
+    return {
+        "zeta": nn.mlp_init(kz, [cfg.initial_noise_dim] + hid + [cfg.hidden_dim], dtype=d),
+        "mu": nn.mlp_init(km, [1 + cfg.hidden_dim] + hid + [cfg.hidden_dim], dtype=d),
+        "sigma": nn.mlp_init(ks, [1 + cfg.hidden_dim] + hid + [cfg.hidden_dim * cfg.noise_dim], dtype=d),
+        "ell": nn.linear_init(kl, cfg.hidden_dim, cfg.data_dim, dtype=d),
+    }
+
+
+def gen_drift(cfg):
+    def mu(params, t, x):
+        return nn.mlp(params["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
+    return mu
+
+
+def gen_diffusion(cfg):
+    def sigma(params, t, x):
+        out = nn.mlp(params["sigma"], _tcat(t, x), nn.lipswish, jnp.tanh)
+        return out.reshape(x.shape[:-1] + (cfg.hidden_dim, cfg.noise_dim))
+    return sigma
+
+
+def generator_sample(params, cfg: NeuralSDEConfig, key, batch: int):
+    """Sample ``Y`` paths: returns (num_steps+1, batch, data_dim)."""
+    kv, kw = jax.random.split(key)
+    v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
+    x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+    bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.noise_dim), cfg.dtype)
+    solve_args = (gen_drift(cfg), gen_diffusion(cfg), params, x0, bm, 0.0, cfg.t1,
+                  cfg.num_steps)
+    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
+        traj = reversible_heun_solve(*solve_args, "general")
+    else:
+        traj = sde_solve(*solve_args, solver=cfg.solver, noise="general")
+    return nn.linear(params["ell"], traj)
+
+
+# =============================================================================
+# Discriminator (Neural CDE, eq. (2))
+# =============================================================================
+
+
+def discriminator_init(key, cfg: NeuralSDEConfig):
+    kx, kf, kg, km = jax.random.split(key, 4)
+    hid = [cfg.disc_width] * cfg.disc_depth
+    h, y, d = cfg.disc_hidden_dim, cfg.data_dim, cfg.dtype
+    return {
+        "xi": nn.mlp_init(kx, [1 + y] + hid + [h], dtype=d),
+        "f": nn.mlp_init(kf, [1 + h] + hid + [h], dtype=d),
+        "g": nn.mlp_init(kg, [1 + h] + hid + [h * (1 + y)], dtype=d),
+        "m": nn.linear_init(km, h, 1, dtype=d),
+    }
+
+
+def disc_f(cfg):
+    def f(params, t, h):
+        return nn.mlp(params["f"], _tcat(t, h), nn.lipswish, jnp.tanh)
+    return f
+
+
+def disc_g(cfg):
+    """g_φ maps h -> (h, 1+y): the CDE is driven by the time-augmented path
+    (t, Y_t) so the vector field sees dt through the control as well."""
+    def g(params, t, h):
+        out = nn.mlp(params["g"], _tcat(t, h), nn.lipswish, jnp.tanh)
+        return out.reshape(h.shape[:-1] + (cfg.disc_hidden_dim, 1 + cfg.data_dim))
+    return g
+
+
+def discriminate_path(params, cfg: NeuralSDEConfig, ys, exact_adjoint: Optional[bool] = None):
+    """Score an observed path ``ys`` (T+1, batch, y): F_φ(Y) = m·H_T.
+
+    Drives the CDE with the piecewise-linear time-augmented control (t, Y).
+    """
+    T = ys.shape[0] - 1
+    ts = jnp.linspace(0.0, cfg.t1, T + 1, dtype=ys.dtype)
+    tt = jnp.broadcast_to(ts[:, None, None], ys.shape[:-1] + (1,))
+    control = LinearPathControl(jnp.concatenate([tt, ys], -1))
+    h0 = nn.mlp(params["xi"], jnp.concatenate([tt[0], ys[0]], -1), nn.lipswish)
+    exact = cfg.exact_adjoint if exact_adjoint is None else exact_adjoint
+    args = (disc_f(cfg), disc_g(cfg), params, h0, control, 0.0, cfg.t1, T)
+    if exact:
+        traj = reversible_heun_solve(*args, "general")
+    else:
+        traj = sde_solve(*args, solver=cfg.solver, noise="general")
+    return nn.linear(params["m"], traj[-1])[..., 0]
+
+
+# =============================================================================
+# Joint generator+discriminator SDE (fake-sample scoring, end-to-end)
+# =============================================================================
+
+
+def joint_drift(cfg):
+    mu_f, f_f, g_f = gen_drift(cfg), disc_f(cfg), disc_g(cfg)
+
+    def drift(params, t, u):
+        x, h = jnp.split(u, [cfg.hidden_dim], axis=-1)
+        mu = mu_f(params["gen"], t, x)
+        f = f_f(params["disc"], t, h)
+        g = g_f(params["disc"], t, h)           # (..., h, 1+y)
+        wl = params["gen"]["ell"]["w"]          # (x, y)
+        dy_dt = jnp.concatenate(
+            [jnp.ones(mu.shape[:-1] + (1,), mu.dtype), mu @ wl], -1)  # (…, 1+y)
+        dh = f + jnp.einsum("...hy,...y->...h", g, dy_dt)
+        return jnp.concatenate([mu, dh], -1)
+
+    return drift
+
+
+def joint_diffusion(cfg):
+    sig_f, g_f = gen_diffusion(cfg), disc_g(cfg)
+
+    def diffusion(params, t, u):
+        x, h = jnp.split(u, [cfg.hidden_dim], axis=-1)
+        sig = sig_f(params["gen"], t, x)        # (..., x, w)
+        g = g_f(params["disc"], t, h)           # (..., h, 1+y)
+        wl = params["gen"]["ell"]["w"]          # (x, y)
+        #   dY = ℓ'(X) dX  ⇒  noise into h is g[:, 1:]·(Wᵀσ)
+        gh = jnp.einsum("...hy,xy,...xw->...hw", g[..., 1:], wl, sig)
+        return jnp.concatenate([sig, gh], -2)   # (..., x+h, w)
+
+    return diffusion
+
+
+def gan_score_fake(params, cfg: NeuralSDEConfig, key, batch: int):
+    """F_φ(Y) for generated Y, via a single joint SDE solve (exact adjoint)."""
+    kv, kw = jax.random.split(key)
+    v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
+    x0 = nn.mlp(params["gen"]["zeta"], v, nn.lipswish)
+    y0 = nn.linear(params["gen"]["ell"], x0)
+    t0f = jnp.zeros(y0.shape[:-1] + (1,), cfg.dtype)
+    h0 = nn.mlp(params["disc"]["xi"], jnp.concatenate([t0f, y0], -1), nn.lipswish)
+    u0 = jnp.concatenate([x0, h0], -1)
+    bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.noise_dim), cfg.dtype)
+    args = (joint_drift(cfg), joint_diffusion(cfg), params, u0, bm, 0.0, cfg.t1, cfg.num_steps)
+    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
+        traj = reversible_heun_solve(*args, "general")
+    else:
+        traj = sde_solve(*args, solver=cfg.solver, noise="general")
+    hT = traj[-1][..., cfg.hidden_dim:]
+    score = nn.linear(params["disc"]["m"], hT)[..., 0]
+    ys = nn.linear(params["gen"]["ell"], traj[..., : cfg.hidden_dim])
+    return score, ys
+
+
+def gan_losses(params, cfg: NeuralSDEConfig, key, y_real, batch: int):
+    """Wasserstein losses (eq. (3)): returns (gen_loss, disc_loss, fake_ys)."""
+    fake_score, fake_ys = gan_score_fake(params, cfg, key, batch)
+    real_score = discriminate_path(params["disc"], cfg, y_real)
+    gen_loss = -jnp.mean(fake_score)
+    disc_loss = jnp.mean(fake_score) - jnp.mean(real_score)
+    return gen_loss, disc_loss, fake_ys
+
+
+def gradient_penalty(params_disc, cfg: NeuralSDEConfig, key, y_real, y_fake):
+    """WGAN-GP baseline (Gulrajani et al. [36]) — the double-backward the
+    paper's clipping removes.  Differentiates the CDE solve w.r.t. the input
+    path (discretise-then-optimise; continuous double-adjoint is exactly the
+    error source §5 describes)."""
+    eps = jax.random.uniform(key, (1, y_real.shape[1], 1), y_real.dtype)
+    y_mix = eps * y_real + (1 - eps) * y_fake
+
+    def score_of_path(y):
+        return jnp.sum(discriminate_path(params_disc, cfg, y, exact_adjoint=False))
+
+    g = jax.grad(score_of_path)(y_mix)
+    gnorm = jnp.sqrt(jnp.sum(g * g, axis=(0, 2)) + 1e-12)
+    return jnp.mean((gnorm - 1.0) ** 2)
+
+
+# =============================================================================
+# Latent SDE (Li et al. [15]; paper Appendix B)
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class LatentSDEConfig:
+    data_dim: int = 1
+    hidden_dim: int = 16
+    context_dim: int = 16
+    initial_noise_dim: int = 8
+    width: int = 32
+    depth: int = 1
+    num_steps: int = 32
+    t1: float = 1.0
+    solver: str = "reversible_heun"
+    exact_adjoint: bool = True
+    kl_weight: float = 1.0
+    dtype: object = jnp.float32
+
+
+def latent_sde_init(key, cfg: LatentSDEConfig):
+    kz, km, ks, kl, ke, kn, kq = jax.random.split(key, 7)
+    hid = [cfg.width] * cfg.depth
+    d = cfg.dtype
+    return {
+        "zeta": nn.mlp_init(kz, [cfg.initial_noise_dim] + hid + [cfg.hidden_dim], dtype=d),
+        "mu": nn.mlp_init(km, [1 + cfg.hidden_dim] + hid + [cfg.hidden_dim], dtype=d),        # prior drift
+        "sigma": nn.mlp_init(ks, [1 + cfg.hidden_dim] + hid + [cfg.hidden_dim], dtype=d),     # diagonal
+        "ell": nn.linear_init(kl, cfg.hidden_dim, cfg.data_dim, dtype=d),
+        "enc": nn.gru_init(ke, cfg.data_dim, cfg.context_dim, dtype=d),                        # ν_φ² (bwd GRU)
+        "nu": nn.mlp_init(kn, [1 + cfg.hidden_dim + cfg.context_dim] + hid + [cfg.hidden_dim], dtype=d),
+        "qz0": nn.mlp_init(kq, [cfg.context_dim] + hid + [2 * cfg.initial_noise_dim], dtype=d),  # ξ_φ
+    }
+
+
+def _lsde_sigma(params, t, x):
+    raw = nn.mlp(params["sigma"], _tcat(t, x), nn.lipswish)
+    return jax.nn.sigmoid(raw) * 0.5 + 0.05  # bounded positive diagonal
+
+
+def latent_sde_loss(params, cfg: LatentSDEConfig, key, y_true):
+    """Negative ELBO (paper eq. (4) / Appendix B).  ``y_true``: (T+1, B, y).
+
+    The KL path integral rides along as an extra state channel so the whole
+    objective is a function of one SDE solve's trajectory.
+    """
+    T = y_true.shape[0] - 1
+    B = y_true.shape[1]
+    dt_data = cfg.t1 / T
+    kz0, kw = jax.random.split(key)
+
+    ctx = nn.gru_scan(params["enc"], y_true, reverse=True)  # (T+1, B, c)
+
+    # ---- initial latent: V̂ ~ N(m, s) from ξ_φ(ctx_0)
+    ms = nn.mlp(params["qz0"], ctx[0], nn.lipswish)
+    m, log_s = jnp.split(ms, 2, -1)
+    s = jnp.exp(jnp.clip(log_s, -8, 4))
+    v = m + s * jax.random.normal(kz0, m.shape, cfg.dtype)
+    kl_v = 0.5 * jnp.sum(m**2 + s**2 - 2.0 * jnp.log(s) - 1.0, -1)  # KL(N(m,s)||N(0,1))
+    x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+
+    aug_params = {"nets": params, "ctx": ctx}
+
+    def post_drift(p, t, u):
+        x = u[..., : cfg.hidden_dim]
+        nets, ctx_ = p["nets"], p["ctx"]
+        idx = jnp.clip(jnp.asarray(t / cfg.t1 * T).astype(jnp.int32), 0, T)
+        c = jax.lax.dynamic_index_in_dim(ctx_, idx, 0, keepdims=False)
+        nu = nn.mlp(nets["nu"], jnp.concatenate([_tcat(t, x), c], -1), nn.lipswish, jnp.tanh)
+        mu = nn.mlp(nets["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
+        sig = _lsde_sigma(nets, t, x)
+        u_ratio = (mu - nu) / sig
+        dkl = 0.5 * jnp.sum(u_ratio * u_ratio, -1, keepdims=True)
+        return jnp.concatenate([nu, dkl], -1)
+
+    def post_diffusion(p, t, u):
+        x = u[..., : cfg.hidden_dim]
+        sig = _lsde_sigma(p["nets"], t, x)
+        return jnp.concatenate([sig, jnp.zeros(sig.shape[:-1] + (1,), sig.dtype)], -1)
+
+    u0 = jnp.concatenate([x0, jnp.zeros((B, 1), cfg.dtype)], -1)
+    bm = BrownianPath(kw, 0.0, cfg.t1, (B, cfg.hidden_dim + 1), cfg.dtype)
+    args = (post_drift, post_diffusion, aug_params, u0, bm, 0.0, cfg.t1, cfg.num_steps)
+    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
+        traj = reversible_heun_solve(*args, "diagonal")
+    else:
+        traj = sde_solve(*args, solver=cfg.solver, noise="diagonal")
+
+    xs = traj[..., : cfg.hidden_dim]                       # (N+1, B, x)
+    kl_path = traj[-1][..., -1]                            # (B,)
+    y_hat = nn.linear(params["ell"], xs)                   # (N+1, B, y)
+    # align solver grid to data grid (num_steps must be a multiple of T)
+    stride = cfg.num_steps // T
+    y_hat_obs = y_hat[::stride]
+    recon = jnp.sum(jnp.mean((y_hat_obs - y_true) ** 2, axis=(1, 2))) * dt_data
+    recon0 = jnp.mean(jnp.sum((y_hat_obs[0] - y_true[0]) ** 2, -1))
+    loss = recon + recon0 + cfg.kl_weight * jnp.mean(kl_path + kl_v)
+    return loss, {"recon": recon, "kl_path": jnp.mean(kl_path), "kl_v": jnp.mean(kl_v)}
+
+
+def latent_sde_sample(params, cfg: LatentSDEConfig, key, batch: int):
+    """Sample from the prior: returns (num_steps+1, batch, y)."""
+    kv, kw = jax.random.split(key)
+    v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
+    x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+
+    def drift(p, t, x):
+        return nn.mlp(p["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
+
+    def diffusion(p, t, x):
+        return _lsde_sigma(p, t, x)
+
+    bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.hidden_dim), cfg.dtype)
+    traj = sde_solve(drift, diffusion, params, x0, bm, 0.0, cfg.t1, cfg.num_steps,
+                     solver=cfg.solver, noise="diagonal")
+    return nn.linear(params["ell"], traj)

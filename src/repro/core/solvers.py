@@ -1,0 +1,180 @@
+"""SDE solvers (paper §3) as `lax.scan` steppers.
+
+All Stratonovich solvers share the calling convention::
+
+    drift(params, t, z)      -> dz/dt                    (shape of z)
+    diffusion(params, t, z)  -> sigma                    (diagonal: shape of z;
+                                                          general: (*z.shape, w))
+
+and consume a :class:`repro.core.brownian.BrownianPath` so that the forward
+and backward passes see bit-identical noise without storing it.
+
+Solver inventory (paper §3 "Computational efficiency"):
+
+=================  ============  =====================  ====================
+solver             SDE type      drift+diffusion evals  notes
+=================  ============  =====================  ====================
+euler_maruyama     Itô           1 / step               order 0.5 baseline
+midpoint           Stratonovich  2 / step               paper's main baseline
+heun               Stratonovich  2 / step               trapezoidal
+reversible_heun    Stratonovich  **1 / step**           algebraically
+                                                        reversible (paper §3)
+=================  ============  =====================  ====================
+
+`reversible_heun` here is the *plain scan* version: differentiating through
+it with standard JAX AD gives discretise-then-optimise gradients (and O(N)
+activation memory).  The O(1)-memory exact adjoint lives in
+:mod:`repro.core.adjoint`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .brownian import BrownianPath
+
+Drift = Callable  # (params, t, z) -> z-shaped
+Diffusion = Callable  # (params, t, z) -> z-shaped (diagonal) or (*z, w) (general)
+
+#: drift+diffusion evaluations per step, per solver (paper's NFE accounting).
+NFE_PER_STEP = {
+    "euler_maruyama": 1,
+    "midpoint": 2,
+    "heun": 2,
+    "reversible_heun": 1,
+}
+
+
+def apply_diffusion(sigma: jax.Array, dw: jax.Array, noise: str) -> jax.Array:
+    """``sigma · dW`` for diagonal or general (matrix) noise."""
+    if noise == "diagonal":
+        return sigma * dw
+    if noise == "general":
+        return jnp.einsum("...ij,...j->...i", sigma, dw)
+    raise ValueError(f"unknown noise type: {noise}")
+
+
+def dw_shape(z_shape, w_dim: Optional[int], noise: str):
+    if noise == "diagonal":
+        return tuple(z_shape)
+    return tuple(z_shape[:-1]) + (w_dim,)
+
+
+class RevHeunState(NamedTuple):
+    """Carried state of the reversible Heun method (Algorithm 1)."""
+
+    z: jax.Array
+    zh: jax.Array  # ẑ — the auxiliary (midpoint-propagated) track
+    mu: jax.Array
+    sigma: jax.Array
+
+
+def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, params, noise):
+    """One step of Algorithm 1.  Exactly one drift+diffusion evaluation."""
+    z, zh, mu, sigma = state
+    zh1 = 2.0 * z - zh + mu * dt + apply_diffusion(sigma, dw, noise)
+    mu1 = drift(params, t + dt, zh1)
+    sigma1 = diffusion(params, t + dt, zh1)
+    z1 = z + 0.5 * (mu + mu1) * dt + apply_diffusion(0.5 * (sigma + sigma1), dw, noise)
+    return RevHeunState(z1, zh1, mu1, sigma1)
+
+
+def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusion, params, noise):
+    """Algebraic inverse of :func:`reversible_heun_step` (Algorithm 2, reverse).
+
+    Reconstructs ``(z_n, ẑ_n, μ_n, σ_n)`` from ``(z_{n+1}, ẑ_{n+1}, μ_{n+1},
+    σ_{n+1})`` in closed form — the paper's key property.
+    """
+    z1, zh1, mu1, sigma1 = state
+    zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
+    mu = drift(params, t1 - dt, zh)
+    sigma = diffusion(params, t1 - dt, zh)
+    z = z1 - 0.5 * (mu + mu1) * dt - apply_diffusion(0.5 * (sigma + sigma1), dw, noise)
+    return RevHeunState(z, zh, mu, sigma)
+
+
+def _euler_maruyama_step(z, t, dt, dw, drift, diffusion, params, noise):
+    return z + drift(params, t, z) * dt + apply_diffusion(diffusion(params, t, z), dw, noise)
+
+
+def _midpoint_step(z, t, dt, dw, drift, diffusion, params, noise):
+    half = z + 0.5 * (drift(params, t, z) * dt + apply_diffusion(diffusion(params, t, z), dw, noise))
+    tm = t + 0.5 * dt
+    return z + drift(params, tm, half) * dt + apply_diffusion(diffusion(params, tm, half), dw, noise)
+
+
+def _heun_step(z, t, dt, dw, drift, diffusion, params, noise):
+    mu0 = drift(params, t, z)
+    s0 = diffusion(params, t, z)
+    zp = z + mu0 * dt + apply_diffusion(s0, dw, noise)
+    mu1 = drift(params, t + dt, zp)
+    s1 = diffusion(params, t + dt, zp)
+    return z + 0.5 * (mu0 + mu1) * dt + apply_diffusion(0.5 * (s0 + s1), dw, noise)
+
+
+def sde_solve(
+    drift: Drift,
+    diffusion: Diffusion,
+    params,
+    z0: jax.Array,
+    bm: BrownianPath,
+    t0: float,
+    t1: float,
+    num_steps: int,
+    solver: str = "reversible_heun",
+    noise: str = "diagonal",
+    save_trajectory: bool = True,
+):
+    """Solve ``dZ = μ dt + σ ∘ dW`` from ``t0`` to ``t1`` in ``num_steps`` steps.
+
+    Returns the trajectory ``(num_steps+1, *z0.shape)`` if ``save_trajectory``
+    else the terminal value.  Differentiating through this function gives
+    discretise-then-optimise gradients (O(N) memory).  For the paper's O(1)
+    exact adjoint use :func:`repro.core.adjoint.reversible_heun_solve`.
+    """
+    dt = (t1 - t0) / num_steps
+    dtype = z0.dtype
+
+    if solver == "reversible_heun":
+        state0 = RevHeunState(z0, z0, drift(params, t0, z0), diffusion(params, t0, z0))
+
+        def body(state, n):
+            t = t0 + n * dt
+            dw = bm.increment(n, num_steps).astype(dtype)
+            new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise)
+            return new, (new.z if save_trajectory else None)
+
+        final, traj = lax.scan(body, state0, jnp.arange(num_steps))
+        if save_trajectory:
+            return jnp.concatenate([z0[None], traj], axis=0)
+        return final.z
+
+    step = {
+        "euler_maruyama": _euler_maruyama_step,
+        "midpoint": _midpoint_step,
+        "heun": _heun_step,
+    }[solver]
+
+    def body(z, n):
+        t = t0 + n * dt
+        dw = bm.increment(n, num_steps).astype(dtype)
+        z1 = step(z, t, dt, dw, drift, diffusion, params, noise)
+        return z1, (z1 if save_trajectory else None)
+
+    final, traj = lax.scan(body, z0, jnp.arange(num_steps))
+    if save_trajectory:
+        return jnp.concatenate([z0[None], traj], axis=0)
+    return final
+
+
+def ode_solve(f, params, z0, t0, t1, num_steps, solver="reversible_heun"):
+    """Deterministic limit (σ=0) — used for the stability tests (App. D.5)."""
+    zero_diff = lambda p, t, z: jnp.zeros_like(z)
+    key = jax.random.PRNGKey(0)
+    bm = BrownianPath(key, t0, t1, z0.shape, z0.dtype)
+    return sde_solve(f, zero_diff, params, z0, bm, t0, t1, num_steps, solver=solver, noise="diagonal")

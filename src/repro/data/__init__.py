@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    air_quality_like,
+    ou_process,
+    sgd_weights_like,
+    token_batches,
+)

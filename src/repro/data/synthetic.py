@@ -1,0 +1,96 @@
+"""Deterministic, seeded synthetic datasets mirroring the paper's benchmarks.
+
+The paper's three datasets (Appendix F) are: SGD weight trajectories, Beijing
+air-quality (PM2.5 + O₃, 24 hourly steps, 12 location labels), and a
+time-dependent Ornstein–Uhlenbeck process.  The container is offline, so we
+generate distribution-matched stand-ins with the *same* shapes, lengths,
+normalisation, and qualitative structure (F.7's OU process is exactly
+reproducible since it is itself synthetic).
+
+All generators are pure functions of a PRNG key → suitable for deterministic
+resume (fault-tolerance requirement) and per-host sharding by folding in the
+host id.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ou_process(key, batch: int, length: int = 32, rho: float = 0.02, kappa: float = 0.1,
+               chi: float = 0.4, dtype=jnp.float32):
+    """Paper F.7: dY = (ρt − κY) dt + χ dW on t ∈ [0, length-1]. Returns
+    (length, batch, 1), normalised per the paper (initial value stats)."""
+    dt = 1.0
+    ts = jnp.arange(length, dtype=dtype)
+
+    def body(y, inp):
+        t, eps = inp
+        y1 = y + (rho * t - kappa * y) * dt + chi * jnp.sqrt(dt) * eps
+        return y1, y1
+
+    k0, key = jax.random.split(key)
+    y0 = jax.random.normal(k0, (batch, 1), dtype)  # stationary-ish start
+    eps = jax.random.normal(key, (length - 1, batch, 1), dtype)
+    _, ys = jax.lax.scan(body, y0, (ts[:-1], eps))
+    out = jnp.concatenate([y0[None], ys], 0)
+    return _normalise_initial(out)
+
+
+def sgd_weights_like(key, batch: int, length: int = 50, dtype=jnp.float32):
+    """Weight-trajectory stand-in: exponential decay toward a random optimum
+    with heteroscedastic SGD noise (univariate, length 50 as in F.3)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    w_star = jax.random.normal(k1, (batch, 1), dtype)
+    w0 = w_star + jax.random.normal(k2, (batch, 1), dtype) * 2.0
+    rate = jax.random.uniform(k3, (batch, 1), dtype, 0.05, 0.2)
+    eps = jax.random.normal(k4, (length - 1, batch, 1), dtype)
+
+    def body(w, e):
+        w1 = w + rate * (w_star - w) + 0.05 * e * jnp.abs(w - w_star)
+        return w1, w1
+
+    _, ws = jax.lax.scan(body, w0, eps)
+    return _normalise_initial(jnp.concatenate([w0[None], ws], 0))
+
+
+def air_quality_like(key, batch: int, length: int = 24, num_labels: int = 12,
+                     dtype=jnp.float32):
+    """Bivariate (PM2.5-like, O₃-like) daily profiles with a class label.
+    O₃ channel has the paper's "peak in the latter half" non-autonomy.
+    Returns (ys (length, batch, 2), labels (batch,))."""
+    kl, kp, ko, kn = jax.random.split(key, 4)
+    labels = jax.random.randint(kl, (batch,), 0, num_labels)
+    ts = jnp.linspace(0.0, 1.0, length, dtype=dtype)[:, None, None]
+    base = (labels.astype(dtype) / num_labels)[None, :, None]
+    pm = base + 0.3 * jnp.sin(2 * jnp.pi * (ts + 0.2 * base)) \
+        + 0.15 * jax.random.normal(kp, (length, batch, 1), dtype)
+    peak_t = 0.55 + 0.25 * base
+    o3 = 0.8 * jnp.exp(-((ts - peak_t) ** 2) / 0.02) + base * 0.2 \
+        + 0.1 * jax.random.normal(ko, (length, batch, 1), dtype)
+    ys = jnp.concatenate([pm, o3], -1)
+    return _normalise_initial(ys), labels
+
+
+def token_batches(key, step: jax.Array, batch: int, seq_len: int, vocab: int):
+    """Deterministic LM token pipeline: batch for global step ``step`` is a
+    pure function of (key, step) — restart/elastic replays identical data.
+    Structured (Zipf-ish + local repetition) so the loss is learnable."""
+    k = jax.random.fold_in(key, step)
+    k1, k2 = jax.random.split(k)
+    # Zipf-like marginal via exponential transform of uniforms
+    u = jax.random.uniform(k1, (batch, seq_len + 1), minval=1e-6)
+    ranks = jnp.floor(jnp.float32(vocab) ** u)
+    toks = jnp.clip(ranks.astype(jnp.int32) - 1, 0, vocab - 1)
+    # local repetition: with p=0.3 copy the previous token
+    rep = jax.random.bernoulli(k2, 0.3, (batch, seq_len + 1))
+    toks = jnp.where(rep, jnp.roll(toks, 1, axis=1), toks)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def _normalise_initial(ys):
+    """Paper Appendix F normalisation: zero-mean/unit-variance *initial value*."""
+    m = jnp.mean(ys[0])
+    s = jnp.std(ys[0]) + 1e-6
+    return (ys - m) / s

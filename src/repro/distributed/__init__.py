@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    active_mesh_axes,
+    batch_pspec,
+    dp_axes,
+    hint,
+    param_pspecs,
+    tp_axis,
+)

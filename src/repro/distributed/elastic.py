@@ -1,0 +1,38 @@
+"""Elastic mesh re-planning after device loss.
+
+At 1000+-node scale a failed host removes a block of devices.  The runtime
+policy: keep the model-parallel degree (it matches the arch's divisibility
+choices and the ICI domain), shrink the data axis to the largest value that
+fits the surviving device count, and re-balance the global batch across the
+new data degree.  Deterministic data (batch = f(key, step)) means the
+restarted run replays identical samples regardless of the new topology.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def plan_mesh(num_devices: int, model_parallel: int = 16) -> Tuple[int, int]:
+    """Largest (data, model) grid with data*model <= num_devices.
+
+    Keeps ``model`` fixed while any multiple fits; degrades model-parallel
+    only when fewer than ``model_parallel`` devices survive.
+    """
+    if num_devices < 1:
+        raise ValueError("no surviving devices")
+    model = min(model_parallel, num_devices)
+    while model > 1 and num_devices // model == 0:
+        model //= 2
+    data = max(1, num_devices // model)
+    return data, model
+
+
+def rebatch(global_batch: int, data_degree: int) -> int:
+    """Per-data-shard batch after an elastic resize (keeps global batch by
+    raising per-shard batch; exact when divisible, padded otherwise)."""
+    return -(-global_batch // data_degree)
+
+
+def surviving_devices(total: int, failed_hosts: int, devices_per_host: int = 8) -> int:
+    return total - failed_hosts * devices_per_host

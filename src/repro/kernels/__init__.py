@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot-spots (+ ops.py dispatch wrappers,
+ref.py pure-jnp oracles).  Validated in interpret mode on CPU."""
+
+from . import ops, ref  # noqa: F401

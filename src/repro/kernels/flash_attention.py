@@ -1,0 +1,115 @@
+"""Causal GQA flash attention (TPU Pallas) — the LM prefill hot spot.
+
+Standard online-softmax blocking adapted to the TPU memory hierarchy:
+Q/K/V tiles live in VMEM, running (m, l, acc) statistics in VMEM scratch,
+the KV axis is the innermost (sequential) grid dimension so the MXU sees
+back-to-back (bq × d)·(d × bk) and (bq × bk)·(bk × d) matmuls without HBM
+materialisation of the (S × S) score matrix.  GQA is expressed through the
+K/V BlockSpec index maps (q-head → kv-head), so no ``repeat`` copy is made.
+
+Block sizes default to 128 — MXU-aligned (128×128 systolic array) and a
+multiple of the f32 (8, 128) VMEM tile.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(causal, scale, bq, bk, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # with a causal mask, KV blocks strictly above the diagonal contribute
+    # nothing — skip their compute entirely (2x flops saving on prefill)
+    needed = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0]  # (bq, d)
+        k = k_ref[0, 0]  # (bk, d)
+        v = v_ref[0, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,           # (B, Hq, S, D)
+    k: jax.Array,           # (B, Hkv, S, D)
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+
+    grid = (B * Hq, S // bq, S // bk)
+    kernel = functools.partial(_kernel, causal, scale, bq, bk)
+
+    def qmap(bh, iq, ik):
+        return (bh // Hq, bh % Hq, iq, 0)
+
+    def kvmap(bh, iq, ik):
+        return (bh // Hq, (bh % Hq) // group, ik, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), qmap),
+            pl.BlockSpec((1, 1, bk, D), kvmap),
+            pl.BlockSpec((1, 1, bk, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), qmap),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,77 @@
+"""Dispatching wrappers: Pallas kernel on TPU, jnp reference elsewhere.
+
+Policy: on a TPU backend the compiled kernels run natively; on CPU/GPU the
+pure-jnp oracle runs (fast + lets XLA fuse).  ``use_kernel=True`` forces the
+Pallas path with ``interpret=True`` off-TPU — this is what the kernel tests
+exercise.  The dry-run/roofline path uses the reference implementations so
+`cost_analysis()` reflects the XLA graph (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import flash_attention as _fa
+from . import fused_mlp as _fm
+from . import ref
+from . import reversible_heun_step as _rh
+from . import ssd_chunk as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _decide(use_kernel: Optional[bool]):
+    """-> (run_kernel, interpret)."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    return use_kernel, not _on_tpu()
+
+
+def flash_attention(q, k, v, causal=True, scale=None, block_q=128, block_k=128,
+                    use_kernel: Optional[bool] = None):
+    run, interp = _decide(use_kernel)
+    if run:
+        return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   block_q=block_q, block_k=block_k, interpret=interp)
+    return ref.flash_attention(q, k, v, causal=causal, scale=scale)
+
+
+def fused_mlp(x, w1, b1, w2, b2, use_kernel: Optional[bool] = None):
+    run, interp = _decide(use_kernel)
+    if run:
+        return _fm.fused_mlp(x, w1, b1, w2, b2, interpret=interp)
+    return ref.fused_mlp(x, w1, b1, w2, b2)
+
+
+def ssd_chunk(x, a, b, c, chunk=64, use_kernel: Optional[bool] = None):
+    run, interp = _decide(use_kernel)
+    if run:
+        return _ssd.ssd_chunk(x, a, b, c, chunk=chunk, interpret=interp)
+    return ref.ssd_scan(x, a, b, c)
+
+
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt, use_kernel: Optional[bool] = None):
+    run, interp = _decide(use_kernel)
+    if run:
+        return _rh.rev_heun_phase1(z, zh, mu, sigma, dw, float(dt), interpret=interp)
+    return ref.rev_heun_phase1(z, zh, mu, sigma, dw, dt)
+
+
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, use_kernel: Optional[bool] = None):
+    run, interp = _decide(use_kernel)
+    if run:
+        return _rh.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, float(dt), interpret=interp)
+    return ref.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt)
+
+
+def fused_xent(logits, labels, use_kernel: Optional[bool] = None):
+    from . import xent as _xent
+
+    run, interp = _decide(use_kernel)
+    if run:
+        return _xent.fused_xent(logits, labels, interpret=interp)
+    return ref.fused_xent(logits, labels)

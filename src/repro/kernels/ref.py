@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition, written with no regard for
+memory movement — tests sweep shapes/dtypes and assert the kernels match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import lipswish
+
+
+# -----------------------------------------------------------------------------
+# reversible Heun fused state updates (diagonal noise)
+# -----------------------------------------------------------------------------
+
+
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float):
+    """ẑ_{n+1} = 2 z_n − ẑ_n + μ_n Δt + σ_n ΔW_n   (Algorithm 1, line 3)."""
+    return 2.0 * z - zh + mu * dt + sigma * dw
+
+
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float):
+    """z_{n+1} = z_n + ½(μ_n+μ_{n+1})Δt + ½(σ_n+σ_{n+1})ΔW_n."""
+    return z + 0.5 * (mu + mu1) * dt + 0.5 * (sigma + sigma1) * dw
+
+
+# -----------------------------------------------------------------------------
+# fused vector-field MLP (Linear → LipSwish → Linear)
+# -----------------------------------------------------------------------------
+
+
+def fused_mlp(x, w1, b1, w2, b2):
+    h = lipswish(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+# -----------------------------------------------------------------------------
+# causal GQA flash attention
+# -----------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+
+
+# -----------------------------------------------------------------------------
+# Mamba2 SSD chunk scan
+# -----------------------------------------------------------------------------
+
+
+def ssd_scan(x, a, b, c):
+    """Naive sequential SSD recurrence (the definition).
+
+    x: (B, H, S, P) inputs, a: (B, H, S) log-decay (<= 0),
+    b, c: (B, H, S, N) input/output projections.
+    h_t = exp(a_t)·h_{t-1} + b_t ⊗ x_t ;  y_t = cᵀ_t h_t.  Returns (B,H,S,P).
+    """
+    Bb, H, S, P = x.shape
+    N = b.shape[-1]
+
+    def per_head(xh, ah, bh, ch):
+        def step(h, inp):
+            xt, at, bt, ct = inp
+            h = jnp.exp(at) * h + bt[:, None] * xt[None, :]
+            return h, ct @ h
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xh.astype(jnp.float32), ah.astype(jnp.float32),
+                                        bh.astype(jnp.float32), ch.astype(jnp.float32)))
+        return ys.astype(x.dtype)
+
+    f = jax.vmap(jax.vmap(per_head))
+    return f(x, a, b, c)
+
+
+# -----------------------------------------------------------------------------
+# fused softmax cross entropy
+# -----------------------------------------------------------------------------
+
+
+def fused_xent(logits, labels):
+    """Per-token next-token cross entropy; logsumexp in f32.
+    logits: (..., V); labels: (...) int32 -> (...) f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return lse - ll

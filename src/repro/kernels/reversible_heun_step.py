@@ -1,0 +1,75 @@
+"""Fused reversible-Heun state updates (Algorithm 1) as Pallas TPU kernels.
+
+The solver's per-step arithmetic is pure elementwise VPU work: without
+fusion, XLA materialises each intermediate (2z, −ẑ, μΔt, σΔW, …) through
+HBM.  One VMEM-resident kernel per phase turns ~6 HBM round-trips into one
+read + one write per operand — the solver loop is memory-bound, so this is
+the hot spot the paper's 1-NFE-per-step advantage exposes.
+
+Phase 1 computes ẑ_{n+1} (before the vector-field evaluation); phase 2
+computes z_{n+1} (after).  Diagonal-noise layout: all operands share the
+state shape, flattened to (rows, cols) with cols a multiple of the 128-lane
+VPU width where possible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phase1_kernel(dt, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, o_ref):
+    o_ref[...] = (
+        2.0 * z_ref[...]
+        - zh_ref[...]
+        + mu_ref[...] * dt
+        + sig_ref[...] * dw_ref[...]
+    )
+
+
+def _phase2_kernel(dt, z_ref, mu_ref, mu1_ref, sig_ref, sig1_ref, dw_ref, o_ref):
+    o_ref[...] = (
+        z_ref[...]
+        + (0.5 * dt) * (mu_ref[...] + mu1_ref[...])
+        + 0.5 * (sig_ref[...] + sig1_ref[...]) * dw_ref[...]
+    )
+
+
+def _tile(n: int, pref: int) -> int:
+    for t in (pref, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if t <= n and n % t == 0:
+            return t
+    return 1
+
+
+def _call_elementwise(kernel, args, interpret: bool):
+    x = args[0]
+    orig_shape = x.shape
+    flat = [a.reshape(-1, orig_shape[-1]) if a.ndim > 1 else a.reshape(1, -1) for a in args]
+    rows, cols = flat[0].shape
+    br, bc = _tile(rows, 256), _tile(cols, 512)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // br, cols // bc),
+        in_specs=[spec] * len(flat),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+    )(*flat)
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "interpret"))
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, interpret: bool = True):
+    return _call_elementwise(
+        functools.partial(_phase1_kernel, dt), (z, zh, mu, sigma, dw), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "interpret"))
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, interpret: bool = True):
+    return _call_elementwise(
+        functools.partial(_phase2_kernel, dt), (z, mu, mu1, sigma, sigma1, dw), interpret)

@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct input stand-ins + PartitionSpecs for every (arch × shape).
+
+``input_specs`` is the single source of truth for what each step function
+consumes — weak-type-correct, shardable, zero device allocation.  The same
+dict drives the dry-run lowers, the roofline costing, and (with real arrays
+of identical shape) the runnable smoke paths.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def dp_axes_of(mesh) -> Optional[Tuple[str, ...]]:
+    got = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return got if got else None
+
+
+def _frontend_split(cfg: ArchConfig, seq_len: int) -> Tuple[int, int]:
+    """(prefix_len, text_len) for archs with a stub modality frontend."""
+    if cfg.frontend and cfg.family != "encdec":
+        f = min(cfg.frontend_len, seq_len // 2)
+        return f, seq_len - f
+    return 0, seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the step kind of ``shape``.
+
+    train   -> {tokens, labels[, embeds][, src_embeds]}
+    prefill -> {tokens[, embeds][, src_embeds]}
+    decode  -> {token, caches, pos}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, cfg.dtype
+
+    if cfg.family == "encdec":
+        half = S // 2
+        if shape.kind == "train":
+            return {"src_embeds": SDS((B, half, cfg.d_model), dt),
+                    "tokens": SDS((B, half), i32), "labels": SDS((B, half), i32)}
+        if shape.kind == "prefill":
+            return {"src_embeds": SDS((B, half, cfg.d_model), dt),
+                    "tokens": SDS((B, half), i32)}
+        caches = T.encdec_cache(cfg, B, max_len=half, src_len=half)
+        return {"token": SDS((B, 1), i32), "caches": caches,
+                "pos": SDS((), i32)}
+
+    f, s_text = _frontend_split(cfg, S)
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, s_text), i32), "labels": SDS((B, s_text), i32)}
+        if f:
+            out["embeds"] = SDS((B, f, cfg.d_model), dt)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, s_text), i32)}
+        if f:
+            out["embeds"] = SDS((B, f, cfg.d_model), dt)
+        return out
+    caches = T.init_cache(cfg, B, max_len=S)
+    return {"token": SDS((B, 1), i32), "caches": caches, "pos": SDS((), i32)}
+
+
+# -----------------------------------------------------------------------------
+# PartitionSpecs
+# -----------------------------------------------------------------------------
+
+
+def _dp_size(mesh) -> int:
+    sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh alike
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def _model_size(mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+def _cache_leaf_pspec(name: str, shape, mesh, dp) -> P:
+    """Decode-cache sharding.  Leaves are stacked (num_units leading).
+
+    jit in_shardings require exact divisibility, so the model-axis placement
+    is shape-aware: heads/channels when divisible, else the sequence axis
+    (flash-decoding style), else replicated.  The batch axis drops its dp
+    sharding when B < dp (e.g. long_500k with global_batch=1).
+    """
+    tp = _model_size(mesh)
+    bdp = dp if (dp and shape[1] % _dp_size(mesh) == 0) else None
+    if name in ("k", "v"):        # (U, B, S, Hkv, hd)
+        if shape[3] % tp == 0:
+            return P(None, bdp, None, "model", None)
+        if shape[2] % tp == 0:
+            return P(None, bdp, "model", None, None)
+        return P(None, bdp, None, None, None)
+    if name in ("ckv", "kpe"):    # (U, B, S, r): MLA latent — seq over model
+        if shape[2] % tp == 0:
+            return P(None, bdp, "model", None)
+        return P(None, bdp, None, None)
+    if name == "conv":            # (U, B, k-1, conv_dim): channels over model
+        if shape[3] % tp == 0:
+            return P(None, bdp, None, "model")
+        return P(None, bdp, None, None)
+    if name == "ssm":             # (U, B, H, N, P): heads over model
+        if shape[2] % tp == 0:
+            return P(None, bdp, "model", None, None)
+        return P(None, bdp, None, None, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_pspecs(caches, mesh):
+    dp = dp_axes_of(mesh)
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (_cache_leaf_pspec(k, v.shape, mesh, dp)
+                        if hasattr(v, "shape") else walk(v))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return P()
+
+    return walk(caches)
+
+
+def batch_pspecs(specs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    """PartitionSpecs matching an ``input_specs`` dict."""
+    dp = dp_axes_of(mesh)
+    nd = _dp_size(mesh)
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = cache_pspecs(v, mesh)
+        elif k == "pos":
+            out[k] = P()
+        else:
+            bdp = dp if (dp and v.shape[0] % nd == 0) else None
+            if k in ("embeds", "src_embeds"):
+                out[k] = P(bdp, None, None)
+            else:  # tokens / labels / token
+                out[k] = P(bdp, None)
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocation."""
+    return jax.eval_shape(partial(T.init_lm, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_state(cfg: ArchConfig, opt_init):
+    params = abstract_params(cfg)
+    opt_state = jax.eval_shape(opt_init, params)
+    return params, opt_state

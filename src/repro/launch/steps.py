@@ -1,0 +1,68 @@
+"""Step functions: train_step / prefill_step / serve_step builders.
+
+Pure functions of (state, batch) suitable for pjit with donated buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..configs.base import ArchConfig
+from ..models import transformer as T
+
+
+def make_optimizer(cfg: ArchConfig, peak_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000, weight_decay: float = 0.1):
+    sched = optim.cosine_schedule(peak_lr, warmup, total)
+    moment_dtype = None if cfg.adam_dtype == "param" else cfg.adam_dtype
+    return optim.adamw(sched, weight_decay=weight_decay, moment_dtype=moment_dtype)
+
+
+def make_train_step(cfg: ArchConfig, opt_update=None, grad_clip: float = 1.0):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    if opt_update is None:
+        _, opt_update = make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch: Dict[str, Any]):
+        (loss, parts), grads = jax.value_and_grad(T.lm_loss, has_aux=True)(
+            params, cfg, batch)
+        grads, gnorm = optim.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, **parts}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
+    """(params, batch) -> (last-token logits, populated caches)."""
+
+    def prefill_step(params, batch: Dict[str, Any]):
+        if cfg.family == "encdec":
+            return T.encdec_prefill(params, cfg, batch["tokens"],
+                                    batch["src_embeds"], max_len=max_len)
+        return T.lm_prefill(params, cfg, batch["tokens"],
+                            embeds=batch.get("embeds"), max_len=max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """(params, caches, token, pos) -> (logits, new caches).  One new token
+    against a KV/state cache — the ``decode_*`` / ``long_*`` dry-run target."""
+
+    def serve_step(params, caches, token, pos):
+        if cfg.family == "encdec":
+            return T.encdec_decode(params, cfg, token, caches, pos)
+        return T.lm_decode(params, cfg, token, caches, pos)
+
+    return serve_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,17 @@
+from .counting import model_flops_per_token, param_count  # noqa: F401
+from .transformer import (  # noqa: F401
+    encdec_cache,
+    encdec_decode,
+    encdec_forward,
+    encdec_prefill,
+    init_cache,
+    init_cache_zeros,
+    init_lm,
+    lm_decode,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+    num_units,
+    softmax_xent,
+    unit_pattern,
+)

@@ -1,0 +1,94 @@
+"""Analytic parameter counts per architecture (roofline MODEL_FLOPS = 6·N·D).
+
+Counts mirror exactly what :mod:`repro.models.transformer` initialises — any
+drift between the two is caught by ``tests/test_models.py::test_param_count``
+which compares against the real pytree leaf sizes on the smoke configs.
+"""
+
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        n = d * rq + rq            # wq_a + q_ln
+        n += rq * cfg.num_heads * (dn + dr)            # wq_b
+        n += d * (rkv + dr) + rkv                      # wkv_a + kv_ln
+        n += rkv * cfg.num_heads * (dn + dv)           # wkv_b
+        n += cfg.num_heads * dv * d                    # wo
+        return n
+    n = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+    if cfg.qkv_bias:
+        n += hq * hd + 2 * hkv * hd
+    return n
+
+
+def _ffn_params(cfg: ArchConfig, d_ff: int | None = None) -> int:
+    d, f = cfg.d_model, cfg.d_ff if d_ff is None else d_ff
+    n = 2 * d * f                       # up + down
+    if cfg.ffn == "swiglu":
+        n += d * f                      # gate
+    return n
+
+
+def _moe_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    e = cfg.top_k if active_only else cfg.num_experts
+    return cfg.d_model * cfg.num_experts + e * _ffn_params(cfg)  # router + experts
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    d, di, n, h, k = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    conv_dim = di + 2 * n
+    total = d * (2 * di + 2 * n + h)    # in_proj
+    total += k * conv_dim + conv_dim    # conv
+    total += 3 * h                      # A_log, dt_bias, Dskip
+    total += di                         # norm_g
+    total += di * d                     # out_proj
+    return total
+
+
+def _norm_params(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_model if cfg.norm == "layernorm" else cfg.d_model
+
+
+def _layer_params(cfg: ArchConfig, layer_idx: int, active_only: bool) -> int:
+    """One block of the stack at global index ``layer_idx``."""
+    n = 0
+    if cfg.ssm:                                              # pure SSM stack
+        return _mamba_params(cfg) + _norm_params(cfg)
+    if cfg.family == "hybrid":
+        is_attn = (layer_idx % cfg.attn_every) == 0
+        mixer = _attn_params(cfg) if is_attn else _mamba_params(cfg)
+        is_moe = cfg.moe and (layer_idx % cfg.moe_every) == 1
+        ffn = _moe_params(cfg, active_only) if is_moe else _ffn_params(cfg)
+        return mixer + ffn + 2 * _norm_params(cfg)
+    # homogeneous transformer block
+    n += _attn_params(cfg)
+    n += _moe_params(cfg, active_only) if cfg.moe else _ffn_params(cfg)
+    n += 2 * _norm_params(cfg)
+    return n
+
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Total (or routing-active) parameter count of the full model."""
+    n = cfg.vocab * cfg.d_model                              # embed
+    if not cfg.tie_embeddings:
+        n += cfg.vocab * cfg.d_model                         # head
+    n += _norm_params(cfg)                                   # final norm
+    for i in range(cfg.num_layers):
+        n += _layer_params(cfg, i, active_only)
+    if cfg.encoder_layers:
+        # encoder blocks: self-attn + ffn; decoder adds cross-attn per block
+        enc = cfg.encoder_layers * (_attn_params(cfg) + _ffn_params(cfg) + 2 * _norm_params(cfg))
+        cross = cfg.num_layers * (_attn_params(cfg) + _norm_params(cfg))
+        n += enc + cross + _norm_params(cfg)                 # + encoder final norm
+    return n
+
+
+def model_flops_per_token(cfg: ArchConfig) -> int:
+    """6·N_active — the standard training-FLOPs-per-token estimate."""
+    return 6 * param_count(cfg, active_only=True)

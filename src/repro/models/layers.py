@@ -1,0 +1,604 @@
+"""Sequence-mixing and FFN layers for the architecture zoo.
+
+Each layer is ``(init(key, cfg) -> params, apply(params, cfg, x, ...) -> y)``
+plus a decode form operating on an explicit cache pytree.  Naming follows
+the sharding rules in :mod:`repro.distributed.sharding`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .. import nn
+from ..configs.base import ArchConfig
+from ..distributed.sharding import hint, tp_size
+from ..kernels import ops
+
+# =============================================================================
+# RoPE
+# =============================================================================
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array, dtype=jnp.float32):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (S, hd/2) or broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+# =============================================================================
+# Blockwise (flash-style) attention in pure jnp — the XLA/dry-run path.
+#
+# Two variants with identical math:
+#   * "scan"     — lax.map over q blocks, lax.scan over kv blocks.  O(1) HLO
+#                  size; used for the full-config compile (memory proof).
+#   * "unrolled" — python loops; every block matmul appears in the HLO, so
+#                  ``cost_analysis()`` reports exact attention FLOPs.  Used by
+#                  the roofline costing lowers (1-/2-layer extrapolation).
+# On TPU backends ``ops.flash_attention`` (the Pallas kernel) is selected
+# instead.  All paths avoid the O(S²) score materialisation.
+# =============================================================================
+
+
+def _online_update(m, l, acc, s, vblk):
+    """One online-softmax accumulation step.
+    s: (B, Hkv, G, bq, bk) f32; vblk: (B, Hkv, bk, D)."""
+    m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m - m_new)
+    l_new = alpha * l + jnp.sum(p, -1, keepdims=True)
+    acc_new = alpha * acc + jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def blockwise_attention(q, k, v, causal: bool = True, scale: Optional[float] = None,
+                        bq: int = 1024, bk: int = 1024, impl: str = "scan"):
+    """GQA attention without materialising (S, S).  q: (B, Hq, S, D);
+    k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0."""
+    B, Hq, S, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    bq = min(bq, S)
+    bk = min(bk, Sk)
+    while S % bq:
+        bq //= 2
+    while Sk % bk:
+        bk //= 2
+    nq, nk = S // bq, Sk // bk
+    qg = q.reshape(B, Hkv, G, nq, bq, D)
+    kb = k.reshape(B, Hkv, nk, bk, D)
+    vb = v.reshape(B, Hkv, nk, bk, D)
+
+    def scores(qblk, kblk, iq, ik):
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        return s
+
+    def init_carry():
+        return (jnp.full((B, Hkv, G, bq, 1), -1e30, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, 1), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, D), jnp.float32))
+
+    if impl == "unrolled":
+        outs = []
+        for iq in range(nq):
+            m, l, acc = init_carry()
+            for ik in range(nk):
+                if causal and ik * bk > iq * bq + bq - 1:
+                    continue  # fully masked block — skip its compute
+                s = scores(qg[:, :, :, iq], kb[:, :, ik], iq, ik)
+                m, l, acc = _online_update(m, l, acc, s, vb[:, :, ik])
+            outs.append(acc / jnp.maximum(l, 1e-30))
+        out = jnp.stack(outs, axis=3)  # (B, Hkv, G, nq, bq, D)
+    else:
+        kb_t = jnp.moveaxis(kb, 2, 0)  # (nk, B, Hkv, bk, D)
+        vb_t = jnp.moveaxis(vb, 2, 0)
+
+        def per_q(args):
+            iq, qblk = args
+
+            def inner(carry, inp):
+                ik, kblk, vblk = inp
+                s = scores(qblk, kblk, iq, ik)
+                return _online_update(*carry, s, vblk), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                inner, init_carry(), (jnp.arange(nk), kb_t, vb_t))
+            return acc / jnp.maximum(l, 1e-30)
+
+        qb_t = jnp.moveaxis(qg, 3, 0)  # (nq, B, Hkv, G, bq, D)
+        out = jax.lax.map(per_q, (jnp.arange(nq), qb_t))
+        out = jnp.moveaxis(out, 0, 3)  # (B, Hkv, G, nq, bq, D)
+
+    return out.reshape(B, Hkv, G, S, D).reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def _attend_dispatch(cfg: ArchConfig, q, k, v, causal: bool):
+    """Pick the attention implementation: Pallas kernel on TPU, blockwise
+    jnp (scan or unrolled per cfg.attn_impl) elsewhere."""
+    if jax.default_backend() == "tpu":
+        return ops.flash_attention(q, k, v, causal=causal)
+    return blockwise_attention(q, k, v, causal=causal,
+                               bq=cfg.attn_block_q, bk=cfg.attn_block_k,
+                               impl=cfg.attn_impl)
+
+
+# =============================================================================
+# GQA attention
+# =============================================================================
+
+
+def gqa_init(key, cfg: ArchConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), cfg.dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), cfg.dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), cfg.dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), cfg.dtype) * s / math.sqrt(2 * cfg.num_layers),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), cfg.dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, kv_source=None, use_rope: bool = True):
+    B, S, _ = x.shape
+    src = x if kv_source is None else kv_source
+    Sk = src.shape[1]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = src @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = src @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, Sk, hkv, hd)
+    v = v.reshape(B, Sk, hkv, hd)
+    if not use_rope:
+        return q, k, v
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions, x.dtype)
+    if kv_source is None:
+        return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+    kcos, ksin = rope_freqs(hd, cfg.rope_theta, jnp.arange(Sk), x.dtype)
+    return apply_rope(q, cos, sin), apply_rope(k, kcos, ksin), v
+
+
+def gqa_attend(p, cfg: ArchConfig, x, causal: bool = True, kv_source=None):
+    """Full-sequence attention (train/prefill).  x: (B, S, D).
+
+    ``kv_source`` (B, Sk, D) switches to cross-attention (enc-dec decoder).
+    Returns (out, (k, v)) — the kv pair feeds prefill cache construction.
+    """
+    B, S, _ = x.shape
+    src = x if kv_source is None else kv_source
+    q, k, v = _project_qkv(p, cfg, x, jnp.arange(S), kv_source=src,
+                           use_rope=kv_source is None)
+    q = jnp.swapaxes(q, 1, 2)  # (B, H, S, hd)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    kv_ret = (jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))
+    # TP head-sharding: when the kv-head count doesn't divide the model axis
+    # (GQA with few kv heads), GSPMD falls into mixed factorizations that
+    # all-gather score tensors (§Perf iteration 1, EXPERIMENTS.md).  Repeat
+    # K/V to the full query heads first — a small gather — so all three
+    # tensors shard cleanly over heads.
+    t = tp_size()
+    if (cfg.attn_mha_tp and t > 1 and cfg.num_kv_heads % t != 0
+            and cfg.num_heads % cfg.num_kv_heads == 0):
+        g = cfg.num_heads // cfg.num_kv_heads
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    q = hint(q, "dp", "tp", None, None)
+    k = hint(k, "dp", "tp", None, None)
+    v = hint(v, "dp", "tp", None, None)
+    o = _attend_dispatch(cfg, q, k, v, causal)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = hint(o @ p["wo"], "dp", None, None)
+    # name the post-all-reduce activation so remat_policy="collectives" can
+    # pin it (backward then skips re-running the TP all-reduce; §Perf C2)
+    out = checkpoint_name(out, "post_ar")
+    return out, kv_ret
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+    }
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache, pos):
+    """Single-token decode.  x: (B, 1, D); cache k/v: (B, Smax, Hkv, hd);
+    ``pos``: scalar current position (same for the whole batch)."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos[None] if jnp.ndim(pos) == 0 else pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    S = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(B, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    o = o.reshape(B, 1, hq * hd).astype(x.dtype)
+    return o @ p["wo"], {"k": k, "v": v}
+
+
+def gqa_cross_decode(p, cfg: ArchConfig, x, k, v):
+    """Cross-attention decode: q from one new token, (k, v) precomputed from
+    the encoder output (no rope, no causal mask).  x: (B, 1, D)."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, _, _ = _project_qkv(p, cfg, x, jnp.zeros((1,), jnp.int32),
+                           kv_source=x, use_rope=False)
+    group = hq // hkv
+    qg = q.reshape(B, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    o = o.reshape(B, 1, hq * hd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+# =============================================================================
+# MLA (multi-head latent attention, MiniCPM3/DeepSeek style)
+# =============================================================================
+
+
+def mla_init(key, cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq_a": jax.random.normal(ks[0], (d, rq), cfg.dtype) * s,
+        "q_ln": nn.rmsnorm_init(rq, cfg.dtype),
+        "wq_b": jax.random.normal(ks[1], (rq, h * (dn + dr)), cfg.dtype) / math.sqrt(rq),
+        "wkv_a": jax.random.normal(ks[2], (d, rkv + dr), cfg.dtype) * s,
+        "kv_ln": nn.rmsnorm_init(rkv, cfg.dtype),
+        "wkv_b": jax.random.normal(ks[3], (rkv, h * (dn + dv)), cfg.dtype) / math.sqrt(rkv),
+        "wo": jax.random.normal(ks[4], (h * dv, d), cfg.dtype) * s / math.sqrt(2 * cfg.num_layers),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = nn.rmsnorm(p["q_ln"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, S, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    kv = x @ p["wkv_a"]
+    ckv, k_pe = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    ckv = nn.rmsnorm(p["kv_ln"], ckv)
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions, x.dtype)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe[..., None, :], cos, sin)[..., 0, :]  # shared across heads
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_attend(p, cfg: ArchConfig, x, causal: bool = True):
+    """MLA train/prefill.  Folds the (nope ‖ rope) score split into a single
+    concatenated head dim so the blockwise kernel applies unchanged."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_pe, ckv, k_pe = _mla_qkv(p, cfg, x, jnp.arange(S))
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q_cat = jnp.concatenate([q_nope, q_pe], -1)                     # (B,S,h,dn+dr)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, S, h, dr))], -1)
+    # pad v to the q head dim so shapes line up, slice after
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, (dn + dr) - dv)))
+    q_cat = hint(jnp.swapaxes(q_cat, 1, 2), "dp", "tp", None, None)
+    k_cat = hint(jnp.swapaxes(k_cat, 1, 2), "dp", "tp", None, None)
+    v_pad = hint(jnp.swapaxes(v_pad, 1, 2), "dp", "tp", None, None)
+    o = blockwise_attention(q_cat, k_cat, v_pad, causal=causal,
+                            scale=1.0 / math.sqrt(dn + dr),
+                            bq=cfg.attn_block_q, bk=cfg.attn_block_k,
+                            impl=cfg.attn_impl)
+    o = jnp.swapaxes(o, 1, 2)[..., :dv]                              # (B,S,h,dv)
+    out = hint(o.reshape(B, S, h * dv) @ p["wo"], "dp", None, None)
+    return out, (ckv, k_pe)                                          # latent cache
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache, pos):
+    """Latent-cache decode (the MLA memory win): scores via the absorbed
+    q·W_kvbᵀ form so only (ckv, k_pe) are cached."""
+    B = x.shape[0]
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_pe, ckv_new, kpe_new = _mla_qkv(p, cfg, x, pos[None] if jnp.ndim(pos) == 0 else pos)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe_new.astype(cache["kpe"].dtype), (0, pos, 0))
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]          # (r, h, dn), (r, h, dv)
+    # absorb: q̃ = q_nope · W_ukᵀ  -> (B, 1, h, r)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32), kpe.astype(jnp.float32))
+    ) / math.sqrt(dn + dr)
+    S = ckv.shape[1]
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    w = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))      # (B,1,h,r)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    return o.reshape(B, 1, h * dv) @ p["wo"], {"ckv": ckv, "kpe": kpe}
+
+
+# =============================================================================
+# FFN: SwiGLU / GELU + MoE
+# =============================================================================
+
+
+def ffn_init(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    p = {"up": jax.random.normal(ks[0], (d, f), cfg.dtype) * s,
+         "down": jax.random.normal(ks[1], (f, d), cfg.dtype) / math.sqrt(f) / math.sqrt(2 * cfg.num_layers)}
+    if cfg.ffn == "swiglu":
+        p["gate"] = jax.random.normal(ks[2], (d, f), cfg.dtype) * s
+    return p
+
+
+def ffn_apply(p, cfg: ArchConfig, x):
+    if cfg.ffn == "swiglu":
+        h = nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    h = hint(h, "dp", None, "tp")
+    out = hint(h @ p["down"], "dp", None, None)
+    return checkpoint_name(out, "post_ar")
+
+
+def moe_init(key, cfg: ArchConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s,
+        "e_up": jax.random.normal(ks[1], (E, d, f), cfg.dtype) * s,
+        "e_down": jax.random.normal(ks[2], (E, f, d), cfg.dtype) / math.sqrt(f) / math.sqrt(2 * cfg.num_layers),
+    }
+    if cfg.ffn == "swiglu":
+        p["e_gate"] = jax.random.normal(ks[3], (E, d, f), cfg.dtype) * s
+    return p
+
+
+def moe_apply(p, cfg: ArchConfig, x):
+    """Top-k token-choice MoE with per-row capacity, gather/scatter dispatch.
+
+    x: (B, S, D).  Routing is per batch row (a proxy for per-device groups):
+    capacity C = S·k/E·cf.  Dispatch/combine are index gathers + scatter-adds
+    — no one-hot einsum, so HLO FLOPs stay close to the active-expert math
+    (important for the MODEL_FLOPS/HLO_FLOPs roofline ratio).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * S * K / E))
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, K)                          # (B, S, K)
+    w = w / jnp.clip(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # combine in the compute dtype: keeping w in f32 drags f32 cotangents
+    # through the dispatch gather/scatter collectives (§Perf iteration A4')
+    w = w.astype(x.dtype)
+
+    def route_one(xb, wb, ib):
+        # xb: (S, D); wb/ib: (S, K)
+        flat_e = ib.reshape(-1)                               # (S*K,)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (S*K, E)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        pos = jnp.sum(pos * oh, axis=-1)                      # position within expert
+        keep = pos < C
+        tok = jnp.repeat(jnp.arange(S), K)
+        slot = jnp.where(keep, flat_e * C + pos, E * C)       # E*C = dropped sentinel
+        buf = jnp.full((E * C + 1,), S, jnp.int32).at[slot].set(tok, mode="drop")
+        buf = buf[: E * C]
+        x_pad = jnp.concatenate([xb, jnp.zeros((1, D), xb.dtype)], 0)
+        xe = x_pad[buf].reshape(E, C, D)
+        wslot = jnp.zeros((E * C + 1,), wb.dtype).at[slot].set(wb.reshape(-1), mode="drop")[: E * C]
+        return xe, buf, wslot
+
+    xe, buf, wslot = jax.vmap(route_one)(x, w, idx)           # (B,E,C,D), (B,E*C), (B,E*C)
+    xe = hint(xe, "dp", "tp", None, None)
+    if cfg.ffn == "swiglu":
+        h = nn.silu(jnp.einsum("becd,edf->becf", xe, p["e_gate"])) * \
+            jnp.einsum("becd,edf->becf", xe, p["e_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, p["e_up"]))
+    h = hint(h, "dp", "tp", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, p["e_down"])         # (B, E, C, D)
+    ye = hint(ye, "dp", "tp", None, None)
+
+    def combine_one(yeb, bufb, wslotb):
+        flat = yeb.reshape(E * C, D) * wslotb[:, None].astype(yeb.dtype)
+        out = jnp.zeros((S + 1, D), yeb.dtype).at[bufb].add(flat, mode="drop")
+        return out[:S]
+
+    y = jax.vmap(combine_one)(ye, buf, wslot)
+    return hint(y, "dp", None, None), logits
+
+
+def moe_aux_loss(logits, idx_weights=None):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tok = jnp.mean(jax.nn.one_hot(top1, probs.shape[-1]), axis=(0, 1))
+    return probs.shape[-1] * jnp.sum(frac_prob * frac_tok)
+
+
+# =============================================================================
+# Mamba2 mixer (SSD)
+# =============================================================================
+
+
+def mamba2_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di, N, H, P_, k = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_conv
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H), cfg.dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (k, conv_dim), cfg.dtype) / math.sqrt(k),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),  # softplus⁻¹
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "norm_g": jnp.ones((di,), cfg.dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), cfg.dtype) / math.sqrt(di) / math.sqrt(2 * cfg.num_layers),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """xbc: (B, S, Cdim); depthwise causal conv, kernel (k, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_apply(p, cfg: ArchConfig, x):
+    """Train/prefill path (chunked SSD).  x: (B, S, D).
+
+    Returns (out, cache) — cache is the terminal (conv window, SSM state),
+    so a prefill directly seeds the recurrent decode path.
+    """
+    B, S, D = x.shape
+    di, N, H, P_ = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    k = cfg.ssm_conv
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], -1)                         # (B,S,conv_dim)
+    xbc = nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # (B,S,H)
+    a = (-jnp.exp(p["A_log"]) * dt)                                      # (B,S,H) log-decay
+    xh = xin.reshape(B, S, H, P_)
+    xs = (xh * dt[..., None].astype(xh.dtype)).transpose(0, 2, 1, 3)     # (B,H,S,P)
+    bmat = jnp.broadcast_to(Bc[:, None], (B, H, S, N))
+    cmat = jnp.broadcast_to(Cc[:, None], (B, H, S, N))
+    y, h_final = ssd_chunked_dense(xs, a.transpose(0, 2, 1), bmat, cmat)  # (B,H,S,P)
+    y = y + p["Dskip"][None, :, None, None].astype(y.dtype) * xh.transpose(0, 2, 1, 3)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di)
+    y = y * nn.silu(z)
+    y = nn.rmsnorm({"g": p["norm_g"]}, y)
+    cache = {"conv": conv_in[:, S - (k - 1):, :], "ssm": h_final}
+    return hint(y @ p["out_proj"], "dp", None, None), cache
+
+
+def ssd_chunked_dense(x, a, b, c, chunk: int = 128):
+    """Pure-jnp chunked SSD (matmul form + associative scan over chunks).
+
+    Same math as kernels/ssd_chunk.py but fully parallel over chunks — this
+    is the XLA path used on CPU and for the dry-run (no sequential S-loop,
+    so cost_analysis sees the real matmul FLOPs).
+    x: (B,H,S,P)  a: (B,H,S)  b,c: (B,H,S,N)  ->  (B,H,S,P)
+    """
+    B, H, S, P_ = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    xc = x.reshape(B, H, nc, L, P_).astype(jnp.float32)
+    ac = a.reshape(B, H, nc, L).astype(jnp.float32)
+    bc = b.reshape(B, H, nc, L, N).astype(jnp.float32)
+    cc = c.reshape(B, H, nc, L, N).astype(jnp.float32)
+    cum = jnp.cumsum(ac, -1)                                   # (B,H,nc,L)
+    # intra-chunk
+    smat = jnp.einsum("bhctn,bhcsn->bhcts", cc, bc)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    smat = jnp.where(tri, smat * decay, 0.0)
+    y = jnp.einsum("bhcts,bhcsp->bhctp", smat, xc)
+    # chunk-final states:  S_c = Σ_s e^{cumL - cum_s} b_s x_sᵀ ;  decay_c = e^{cumL}
+    bscaled = bc * jnp.exp(cum[..., -1:, None] - cum[..., :, None])
+    Sc = jnp.einsum("bhcsn,bhcsp->bhcnp", bscaled, xc)         # (B,H,nc,N,P)
+    dc = jnp.exp(cum[..., -1])                                 # (B,H,nc)
+    # inter-chunk initial states via associative linear-recurrence scan:
+    #   h_c = d_c · h_{c-1} + S_c   (h_0 init 0); we need h before each chunk.
+    def op(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dfull, sfull = jax.lax.associative_scan(op, (dc, Sc), axis=2)
+    # state *before* chunk c is the scan result of chunk c-1 (shift right)
+    h_prev = jnp.concatenate([jnp.zeros_like(Sc[:, :, :1]), sfull[:, :, :-1]], axis=2)
+    y = y + jnp.einsum("bhctn,bhcnp->bhctp", cc * jnp.exp(cum)[..., None], h_prev)
+    return y.reshape(B, H, S, P_).astype(x.dtype), sfull[:, :, -1]
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype):
+    di, N, H, P_, k = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, k - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, N, P_), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, cache, pos):
+    """Single-token recurrent step.  x: (B, 1, D)."""
+    B = x.shape[0]
+    di, N, H, P_ = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xbc_new = jnp.concatenate([xin, Bc, Cc], -1)               # (B, conv_dim)
+    conv_win = jnp.concatenate([cache["conv"], xbc_new[:, None]], 1)  # (B, k, conv)
+    w = p["conv_w"]
+    out = jnp.sum(conv_win * w[None], axis=1) + p["conv_b"]
+    xbc = nn.silu(out)
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                             # (B,H) decay
+    xh = xin.reshape(B, H, P_).astype(jnp.float32) * dt[..., None]
+    h = cache["ssm"] * a[..., None, None] + Bc[:, None, :, None].astype(jnp.float32) * xh[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", Cc.astype(jnp.float32), h)
+    y = y + p["Dskip"][None, :, None] * xin.reshape(B, H, P_).astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype) * nn.silu(z)
+    y = nn.rmsnorm({"g": p["norm_g"]}, y)
+    new_cache = {"conv": conv_win[:, 1:], "ssm": h}
+    return (y @ p["out_proj"])[:, None], new_cache

@@ -1,0 +1,163 @@
+"""Functional NN building blocks (params are plain pytrees of arrays).
+
+Everything is a pair ``(X_init(key, ...) -> params, X(params, inputs) -> out)``
+so that models compose as pure functions — the form pjit/shard_map and the
+custom SDE adjoints require.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# -----------------------------------------------------------------------------
+# activations
+# -----------------------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def lipswish(x):
+    """LipSwish (Chen et al. [38]): 0.909·x·sigmoid(x), Lipschitz constant 1.
+
+    The paper's required discriminator activation (§5): Lipschitz ≤ 1 and
+    twice continuously differentiable (ReLU is ruled out).
+    """
+    return 0.909 * silu(x)
+
+
+ACTIVATIONS = {
+    "lipswish": lipswish,
+    "silu": silu,
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+# -----------------------------------------------------------------------------
+# linear / mlp
+# -----------------------------------------------------------------------------
+
+
+def linear_init(key, in_dim: int, out_dim: int, bias: bool = True, scale: Optional[float] = None,
+                dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    s = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": jax.random.uniform(kw, (in_dim, out_dim), dtype, -s, s)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def mlp_init(key, sizes: Sequence[int], bias: bool = True, dtype=jnp.float32):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {"layers": [linear_init(k, a, b, bias, dtype=dtype)
+                       for k, a, b in zip(keys, sizes[:-1], sizes[1:])]}
+
+
+def mlp(params, x, activation: Callable = lipswish, final_activation: Optional[Callable] = None):
+    layers = params["layers"]
+    for p in layers[:-1]:
+        x = activation(linear(p, x))
+    x = linear(layers[-1], x)
+    if final_activation is not None:
+        x = final_activation(x)
+    return x
+
+
+# -----------------------------------------------------------------------------
+# norms
+# -----------------------------------------------------------------------------
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    m = jnp.mean(x, -1, keepdims=True)
+    v = jnp.var(x, -1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps) * params["g"] + params["b"]
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # compute the variance in f32 for bf16 stability
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(v + eps)).astype(x.dtype) * params["g"]
+
+
+# -----------------------------------------------------------------------------
+# embedding
+# -----------------------------------------------------------------------------
+
+
+class Embedding:
+    @staticmethod
+    def init(key, vocab: int, dim: int, dtype=jnp.float32):
+        return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+    @staticmethod
+    def lookup(params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    @staticmethod
+    def attend(params, x):
+        """Tied-readout logits."""
+        return x @ params["table"].T
+
+
+# -----------------------------------------------------------------------------
+# GRU (latent-SDE encoder ν_φ², paper Appendix B / F)
+# -----------------------------------------------------------------------------
+
+
+def gru_init(key, in_dim: int, hidden: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": linear_init(k1, in_dim, 3 * hidden, dtype=dtype),
+        "wh": linear_init(k2, hidden, 3 * hidden, bias=False, dtype=dtype),
+        "h0": jnp.zeros((hidden,), dtype),
+    }
+
+
+def gru_cell(params, h, x):
+    gi = linear(params["wi"], x)
+    gh = linear(params["wh"], h)
+    i_r, i_z, i_n = jnp.split(gi, 3, -1)
+    h_r, h_z, h_n = jnp.split(gh, 3, -1)
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    return (1 - z) * n + z * h
+
+
+def gru_scan(params, xs, reverse: bool = False):
+    """Run a GRU over time axis 0 of ``xs`` (T, ..., in_dim) -> (T, ..., H)."""
+    h0 = jnp.broadcast_to(params["h0"], xs.shape[1:-1] + params["h0"].shape)
+
+    def body(h, x):
+        h = gru_cell(params, h, x)
+        return h, h
+
+    _, hs = jax.lax.scan(body, h0, xs, reverse=reverse)
+    return hs

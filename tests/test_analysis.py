@@ -1,0 +1,53 @@
+"""Unit tests for the measurement layer: HLO collective/traffic parsers.
+
+The roofline numbers are only as good as these parsers — pin their
+behaviour on synthetic post-SPMD HLO snippets."""
+
+from repro.launch.dryrun import collective_bytes, macro_bytes
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+%fused (p: bf16[128,256]) -> bf16[128,256] {
+  %ag = bf16[128,256]{1,0} all-gather(bf16[8,256]{1,0} %p), dimensions={0}
+  ROOT %r = bf16[128,256]{1,0} add(%ag, %ag)
+}
+
+ENTRY %main {
+  %x = bf16[64,512]{1,0} parameter(0)
+  %w = bf16[512,256]{1,0} parameter(1)
+  %d = bf16[64,256]{1,0} dot(bf16[64,512]{1,0} %x, bf16[512,256]{1,0} %w), lhs_contracting_dims={1}
+  %ar = f32[64,256]{1,0} all-reduce(f32[64,256]{1,0} %c), replica_groups={}
+  %rs = f32[4,256]{1,0} reduce-scatter(f32[64,256]{1,0} %c2), dimensions={0}
+  %a2a = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-to-all(f32[8,16]{1,0} %e, f32[8,16]{1,0} %f)
+  %cp = bf16[32]{0} collective-permute(bf16[32]{0} %g), source_target_pairs={{0,1}}
+  %g1 = bf16[64,32]{1,0} gather(bf16[1000,32]{1,0} %table, s32[64,1]{1,0} %idx), offset_dims={1}
+  %dus = bf16[64,4096,8]{2,1,0} dynamic-update-slice(bf16[64,4096,8]{2,1,0} %cache, bf16[64,1,8]{2,1,0} %upd, %i, %j, %k)
+}
+"""
+
+
+def test_collective_bytes_by_type():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 256 * 4
+    assert out["reduce-scatter"] == 4 * 256 * 4
+    assert out["all-to-all"] == 2 * 8 * 16 * 4          # tuple: both members
+    assert out["collective-permute"] == 32 * 2
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_macro_bytes_rules():
+    out = macro_bytes(HLO)
+    dot = (64 * 512 + 512 * 256 + 64 * 256) * 2          # A + B + C, bf16
+    gather = 2 * 64 * 32 * 2                             # 2 x result
+    dus = 2 * 64 * 1 * 8 * 2                             # 2 x update slice
+    assert out == dot + gather + dus
+
+
+def test_parsers_ignore_metadata_shapes():
+    line = ('%ar = f32[16]{0} all-reduce(f32[16]{0} %x), '
+            'metadata={op_name="foo" source_file="f32[9999999]"}\n')
+    assert collective_bytes(line)["all-reduce"] == 16 * 4

@@ -1,0 +1,180 @@
+"""Brownian sampling tests: exactness, determinism, bridge statistics.
+
+Property-based (hypothesis) tests assert the system invariants:
+additivity W(s,u) = W(s,t) + W(t,u), bit-identical replay, and the Lévy
+bridge conditional statistics of eq. (8).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.brownian import BrownianPath, VirtualBrownianTree
+from repro.core.brownian_interval import BrownianInterval, HostVirtualBrownianTree
+
+
+# -----------------------------------------------------------------------------
+# host-side Brownian Interval (paper §4, Algorithms 3/4)
+# -----------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 0.99), st.floats(0.01, 1.0)),
+                min_size=1, max_size=20),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_interval_additivity(queries, seed):
+    """W(s,u) == W(s,m) + W(m,u) for any midpoint, any query history."""
+    bi = BrownianInterval(0.0, 1.0, (3,), seed=seed)
+    for a, b in queries:
+        s, t = min(a, b), max(a, b)
+        if t - s < 1e-6:
+            continue
+        m = 0.5 * (s + t)
+        w_st = bi(s, t)
+        w_sm = bi(s, m)
+        w_mt = bi(m, t)
+        np.testing.assert_allclose(w_st, w_sm + w_mt, rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_interval_deterministic_replay(seed):
+    """(a) Re-querying the SAME tree in any order returns identical values —
+    the backward-pass requirement (§4).  (b) A fresh tree with the same seed
+    and the same query history reproduces the path exactly."""
+    qs = [(0.1, 0.3), (0.5, 0.9), (0.0, 0.05), (0.3, 0.5)]
+    b1 = BrownianInterval(0.0, 1.0, (4,), seed=seed)
+    fwd = [b1(s, t) for s, t in qs]
+    bwd = [b1(s, t) for s, t in reversed(qs)][::-1]     # same tree, reversed
+    for a, b in zip(fwd, bwd):
+        np.testing.assert_allclose(a, b, rtol=1e-12)
+    b2 = BrownianInterval(0.0, 1.0, (4,), seed=seed)    # fresh, same history
+    again = [b2(s, t) for s, t in qs]
+    for a, b in zip(fwd, again):
+        np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+def test_interval_bridge_statistics():
+    """Conditional mean/var of W(0, s) | W(0, 1) matches eq. (8)."""
+    n = 4000
+    s = 0.3
+    samples = np.zeros((n, 2))
+    for i in range(n):
+        bi = BrownianInterval(0.0, 1.0, (1,), seed=i)
+        w01 = bi(0.0, 1.0)[0]
+        w0s = bi(0.0, s)[0]
+        samples[i] = (w01, w0s)
+    w01, w0s = samples[:, 0], samples[:, 1]
+    # regress: E[W_{0,s} | W_{0,1}] = s·W_{0,1}; Var = s(1-s)
+    slope = np.polyfit(w01, w0s, 1)[0]
+    resid_var = np.var(w0s - s * w01)
+    assert abs(slope - s) < 0.05, slope
+    assert abs(resid_var - s * (1 - s)) < 0.05, resid_var
+
+
+def test_interval_exact_vs_vbtree_approximate():
+    """The Interval aligns with query points (exact); the VBT discretises."""
+    bi = BrownianInterval(0.0, 1.0, (1,), seed=7)
+    q = (0.123456789, 0.123456789 + 1e-4)
+    w1 = bi(*q)
+    w2 = bi(*q)
+    np.testing.assert_array_equal(w1, w2)  # exact & reproducible
+    vb = HostVirtualBrownianTree(0.0, 1.0, (1,), seed=7, eps=1e-2)
+    # VBT at coarse eps cannot resolve the tiny interval exactly
+    v1 = vb(*q)
+    assert v1.shape == (1,)
+
+
+def test_interval_cache_hits():
+    """Forward + backward sweep: with a cache sized to the query count the
+    backward pass is all hits (the paper's amortised-O(1) claim); a small
+    cache degrades gracefully (evictions -> recompute, still correct)."""
+    bi = BrownianInterval(0.0, 1.0, (2,), seed=0, cache_size=1024,
+                          preplant_dt=0.01)
+    ts = np.linspace(0, 1, 101)
+    fwd = [bi(s, t) for s, t in zip(ts[:-1], ts[1:])]
+    h_fwd, m_fwd = bi.cache_stats
+    bwd = [bi(s, t) for s, t in zip(ts[:-1][::-1], ts[1:][::-1])][::-1]
+    for a, b in zip(fwd, bwd):
+        np.testing.assert_array_equal(a, b)
+    h_all, m_all = bi.cache_stats
+    assert m_all == m_fwd, "backward sweep must be pure cache hits"
+    assert h_all - h_fwd == 100  # one hit per backward query: amortised O(1)
+    # small cache: same values, worse hit rate, no error
+    small = BrownianInterval(0.0, 1.0, (2,), seed=0, cache_size=8)
+    fwd_small = [small(s, t) for s, t in zip(ts[:-1], ts[1:])]
+    for a, b in zip(fwd, fwd_small):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_interval_rejects_bad_query():
+    bi = BrownianInterval(0.0, 1.0, (1,))
+    with pytest.raises(ValueError):
+        bi(0.5, 0.2)
+    with pytest.raises(ValueError):
+        bi(-0.1, 0.5)
+
+
+# -----------------------------------------------------------------------------
+# in-graph BrownianPath (TPU-native adaptation)
+# -----------------------------------------------------------------------------
+
+
+def test_path_increments_deterministic(key):
+    bm = BrownianPath(key, 0.0, 1.0, (8,))
+    a = bm.increment(jnp.int32(3), 10)
+    b = bm.increment(jnp.int32(3), 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_path_increment_statistics(key):
+    bm = BrownianPath(key, 0.0, 1.0, (20_000,))
+    ws = bm.increments(16)  # (16, 20000)
+    var = np.var(np.asarray(ws), axis=1)
+    np.testing.assert_allclose(var, 1.0 / 16, rtol=0.1)
+    total = np.asarray(jnp.sum(ws, 0))
+    assert abs(np.var(total) - 1.0) < 0.05
+
+
+def test_path_evaluate_additivity(key):
+    bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float64)
+    w1 = bm.evaluate(0.25, 0.5)
+    w2 = bm.evaluate(0.5, 0.75)
+    w3 = bm.evaluate(0.25, 0.75)
+    np.testing.assert_allclose(np.asarray(w1 + w2), np.asarray(w3), atol=1e-6)
+
+
+def test_virtual_brownian_tree_consistency(key):
+    vb = VirtualBrownianTree(key, 0.0, 1.0, (4,), tol=1e-4)
+    a = vb.evaluate(0.2, 0.7)
+    b = vb.evaluate(0.2, 0.7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_path_fwd_bwd_same_noise(seed):
+    """The solver requirement (§4): forward and backward passes see
+    bit-identical increments with zero storage."""
+    bm = BrownianPath(jax.random.PRNGKey(seed), 0.0, 1.0, (4,))
+    fwd = [np.asarray(bm.increment(jnp.int32(i), 8)) for i in range(8)]
+    bwd = [np.asarray(bm.increment(jnp.int32(i), 8)) for i in range(7, -1, -1)]
+    for a, b in zip(fwd, bwd[::-1]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dense_path_pathwise_consistent_refinement(key):
+    """DenseBrownianPath: coarse increments are sums of fine ones — the
+    property strong-convergence measurement needs."""
+    from repro.core.brownian import DenseBrownianPath
+
+    bm = DenseBrownianPath.sample(key, 0.0, 1.0, 64, (5,), jnp.float64)
+    for n_coarse in (8, 16, 32):
+        r = 64 // n_coarse
+        for n in range(0, n_coarse, 3):
+            coarse = bm.increment(jnp.int32(n), n_coarse)
+            fine = sum(bm.increment(jnp.int32(n * r + i), 64) for i in range(r))
+            np.testing.assert_allclose(np.asarray(coarse), np.asarray(fine),
+                                       rtol=1e-12, atol=1e-12)

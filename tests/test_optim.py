@@ -1,0 +1,78 @@
+"""Optimizer + schedule property tests (hypothesis where it pays)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.core.clipping import clip_lipschitz, clip_mlp
+
+
+def test_adam_bias_correction_first_step(key):
+    """After one step from zero state, Adam's update is -lr·sign-ish of g
+    (bias correction makes m̂ = g exactly)."""
+    oi, ou = optim.adam(lr=1e-2, eps=0.0)
+    p = {"w": jax.random.normal(key, (16,))}
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (16,))}
+    upd, _ = ou(g, oi(p), p)
+    want = -1e-2 * np.sign(np.asarray(g["w"]))
+    np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-5)
+
+
+def test_adam_moment_dtype_override(key):
+    oi, _ = optim.adam(1e-3, moment_dtype="bfloat16")
+    p = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    st_ = oi(p)
+    assert st_.m["w"].dtype == jnp.bfloat16
+    assert st_.v["w"].dtype == jnp.bfloat16
+
+
+@given(st.floats(0.1, 10.0), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm_bound(max_norm, size):
+    g = {"a": jnp.ones((size,)) * 3.0, "b": jnp.full((2,), -4.0)}
+    clipped, gnorm = optim.clip_by_global_norm(g, max_norm)
+    new_norm = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped))))
+    assert new_norm <= max_norm * (1 + 1e-4) or new_norm <= float(gnorm) + 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = optim.cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 0.11      # end of warmup
+    assert float(lr(jnp.int32(100))) >= 0.1 - 1e-6          # floor
+    assert float(lr(jnp.int32(50))) < float(lr(jnp.int32(12)))  # decays
+
+
+def test_swa_is_running_mean(key):
+    ps = [{"w": jnp.full((3,), float(i))} for i in range(5)]
+    avg = ps[0]
+    for n, p in enumerate(ps[1:], start=1):
+        avg = optim.swa_update(avg, p, n)
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.full(3, 2.0), rtol=1e-6)
+
+
+@given(st.floats(0.5, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_clipping_idempotent(scale):
+    """clip(clip(W)) == clip(W) — projection property (paper §5)."""
+    key = jax.random.PRNGKey(0)
+    p = {"layers": [{"w": jax.random.normal(key, (8, 4)) * scale,
+                     "b": jnp.ones((4,))}]}
+    c1 = clip_mlp(p)
+    c2 = clip_mlp(c1)
+    np.testing.assert_array_equal(np.asarray(c1["layers"][0]["w"]),
+                                  np.asarray(c2["layers"][0]["w"]))
+    bound = 1.0 / 8
+    assert float(jnp.max(jnp.abs(c1["layers"][0]["w"]))) <= bound + 1e-9
+
+
+def test_adadelta_updates_move_params(key):
+    oi, ou = optim.adadelta(lr=1.0)
+    p = {"w": jax.random.normal(key, (8,))}
+    g = {"w": jnp.ones((8,))}
+    state = oi(p)
+    upd, state = ou(g, state, p)
+    assert float(jnp.max(jnp.abs(upd["w"]))) > 0.0
+    assert np.all(np.asarray(upd["w"]) < 0)   # descent direction

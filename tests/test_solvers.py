@@ -1,0 +1,165 @@
+"""Solver unit tests: reversibility, convergence order, ODE stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.brownian import BrownianPath
+from repro.core.solvers import (RevHeunState, reversible_heun_reverse_step,
+                                reversible_heun_step, sde_solve)
+
+
+@pytest.fixture(autouse=True)
+def _x64_scope():
+    """These tests need f64 (FP-exactness claims); scope it to this module
+    so x64 never leaks into the bf16 model tests that run later."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+
+def _nets(key, x_dim=6, dtype=jnp.float64):
+    from repro import nn
+
+    k1, k2 = jax.random.split(key)
+    p = {"f": nn.mlp_init(k1, [x_dim, 16, x_dim], dtype=dtype),
+         "g": nn.mlp_init(k2, [x_dim, 16, x_dim], dtype=dtype)}
+    drift = lambda p_, t, x: nn.mlp(p_["f"], x, nn.lipswish, jnp.tanh)
+    diffusion = lambda p_, t, x: 0.2 * nn.mlp(p_["g"], x, nn.lipswish, jnp.tanh)
+    return p, drift, diffusion
+
+
+def test_algebraic_reversibility(key):
+    """Forward then reverse step reconstructs the state to float precision —
+    the paper's core property (Algorithm 2 'Reverse step').  The carried
+    (μ, σ) must satisfy the solver invariant μ_n = μ(t_n, ẑ_n)."""
+    p, drift, diffusion = _nets(key)
+    z = jax.random.normal(jax.random.fold_in(key, 1), (4, 6), jnp.float64)
+    zh = z + 0.01
+    state = RevHeunState(z, zh, drift(p, 0.0, zh), diffusion(p, 0.0, zh))
+    dt, dw = 0.05, 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (4, 6), jnp.float64)
+    fwd = reversible_heun_step(state, 0.0, dt, dw, drift, diffusion, p, "diagonal")
+    back = reversible_heun_reverse_step(fwd, dt, dt, dw, drift, diffusion, p, "diagonal")
+    for a, b in zip(state, back):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12, atol=1e-12)
+
+
+def test_reversibility_many_steps(key):
+    """Reverse the whole trajectory of a 64-step solve."""
+    p, drift, diffusion = _nets(key)
+    z0 = jax.random.normal(jax.random.fold_in(key, 1), (3, 6), jnp.float64)
+    bm = BrownianPath(jax.random.fold_in(key, 2), 0.0, 1.0, (3, 6), jnp.float64)
+    n = 64
+    dt = 1.0 / n
+    state = RevHeunState(z0, z0, drift(p, 0.0, z0), diffusion(p, 0.0, z0))
+    states = [state]
+    for i in range(n):
+        state = reversible_heun_step(state, i * dt, dt, bm.increment(i, n),
+                                     drift, diffusion, p, "diagonal")
+        states.append(state)
+    for i in range(n, 0, -1):
+        state = reversible_heun_reverse_step(state, i * dt, dt, bm.increment(i - 1, n),
+                                             drift, diffusion, p, "diagonal")
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(state, states[i - 1]))
+        assert err < 1e-9, f"reverse diverged at step {i}: {err}"
+
+
+@pytest.mark.parametrize("solver", ["midpoint", "heun", "reversible_heun"])
+def test_strong_convergence_order(key, solver):
+    """Strong order ~0.5 on a multiplicative-noise scalar SDE (Theorem D.12).
+
+    Uses DenseBrownianPath so coarse and fine solves see the SAME path."""
+    from repro.core.brownian import DenseBrownianPath
+
+    drift = lambda p, t, y: -0.5 * y
+    diffusion = lambda p, t, y: 0.5 * y
+    n_paths = 2000
+    y0 = jnp.ones((n_paths, 1), jnp.float64)
+    bm = DenseBrownianPath.sample(key, 0.0, 1.0, 512, (n_paths, 1), jnp.float64)
+    errs, hs = [], []
+    fine = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, 512,
+                     solver="heun", save_trajectory=False)
+    for n in (8, 16, 32, 64):
+        c = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, n,
+                      solver=solver, save_trajectory=False)
+        errs.append(float(jnp.mean(jnp.abs(c - fine))))
+        hs.append(1.0 / n)
+    order = np.polyfit(np.log(hs), np.log(errs), 1)[0]
+    assert 0.3 < order < 1.6, f"{solver}: empirical strong order {order}"
+
+
+def test_additive_noise_first_order(key):
+    """Additive noise upgrades reversible Heun to strong order ~1 (Thm D.17)."""
+    from repro.core.brownian import DenseBrownianPath
+
+    drift = lambda p, t, y: jnp.sin(y)
+    diffusion = lambda p, t, y: jnp.ones_like(y)
+    n_paths = 2000
+    y0 = jnp.ones((n_paths, 1), jnp.float64)
+    bm = DenseBrownianPath.sample(key, 0.0, 1.0, 512, (n_paths, 1), jnp.float64)
+    fine = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, 512,
+                     solver="heun", save_trajectory=False)
+    errs, hs = [], []
+    for n in (8, 16, 32, 64):
+        c = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, n,
+                      solver="reversible_heun", save_trajectory=False)
+        errs.append(float(jnp.mean(jnp.abs(c - fine))))
+        hs.append(1.0 / n)
+    order = np.polyfit(np.log(hs), np.log(errs), 1)[0]
+    assert order > 0.8, f"additive-noise order {order} (expected ~1)"
+
+
+def test_stability_region(key):
+    """App. D.5: for y' = λy the iterates stay bounded iff λh ∈ [-i, i]."""
+    from repro.core.solvers import ode_solve
+
+    # λ = i (on the boundary, stable): λh with h=1/64 well inside [-i, i].
+    lam_stable = 1j
+    lam_unstable = -4.0  # real negative λ is OUTSIDE the interval [-i, i]
+    for lam, should_be_bounded in ((lam_stable, True), (lam_unstable, False)):
+        # complex arithmetic via 2D real system [[re, -im], [im, re]]
+        A = jnp.array([[lam.real if isinstance(lam, complex) else lam,
+                        -(lam.imag if isinstance(lam, complex) else 0.0)],
+                       [lam.imag if isinstance(lam, complex) else 0.0,
+                        lam.real if isinstance(lam, complex) else lam]], jnp.float64)
+        f = lambda p, t, y: y @ A.T
+        y0 = jnp.array([[1.0, 0.0]], jnp.float64)
+        traj = ode_solve(f, None, y0, 0.0, 40.0, 2560, solver="reversible_heun")
+        mx = float(jnp.max(jnp.abs(traj)))
+        if should_be_bounded:
+            assert mx < 10.0, f"λ={lam}: should be bounded, got {mx}"
+        else:
+            assert mx > 1e3, f"λ={lam}: should blow up, got {mx}"
+
+
+def test_nfe_accounting():
+    """Reversible Heun costs 1 drift+diffusion eval per step; midpoint/Heun
+    cost 2 (the paper's 'computational efficiency' claim, §3)."""
+    from repro.core.solvers import (NFE_PER_STEP, _heun_step, _midpoint_step)
+
+    counts = {"n": 0}
+
+    def drift(p, t, y):
+        counts["n"] += 1
+        return -y
+
+    diffusion = lambda p, t, y: jnp.ones_like(y) * 0.1
+    y = jnp.ones((1, 1))
+    dw = jnp.full((1, 1), 0.1)
+
+    counts["n"] = 0
+    st = RevHeunState(y, y, drift(None, 0.0, y), diffusion(None, 0.0, y))
+    counts["n"] = 0  # don't count the one-off init
+    reversible_heun_step(st, 0.0, 0.1, dw, drift, diffusion, None, "diagonal")
+    assert counts["n"] == NFE_PER_STEP["reversible_heun"] == 1
+
+    counts["n"] = 0
+    _midpoint_step(y, 0.0, 0.1, dw, drift, diffusion, None, "diagonal")
+    assert counts["n"] == NFE_PER_STEP["midpoint"] == 2
+
+    counts["n"] = 0
+    _heun_step(y, 0.0, 0.1, dw, drift, diffusion, None, "diagonal")
+    assert counts["n"] == NFE_PER_STEP["heun"] == 2
