@@ -44,30 +44,35 @@ def relative_l1(g1, g2):
 
 
 def gradient_error(solver: str, num_steps: int, key=None, dtype=jnp.float64):
-    """Relative L1 error of adjoint-computed vs autodiff gradients."""
-    from repro.core.adjoint import continuous_adjoint_solve, reversible_heun_solve
-    from repro.core.solvers import sde_solve
+    """Relative L1 error of adjoint-computed vs autodiff gradients.
+
+    Both paths dispatch through :func:`repro.solve`: the reference is
+    ``gradient_mode="discretise"`` (AD through the scan), the adjoint under
+    test is the registry's native adjoint for the solver —
+    ``"reversible_adjoint"`` (exact) for reversible Heun,
+    ``"continuous_adjoint"`` (eq. (6), O(√h) error) for midpoint/Heun.
+    """
+    from repro.core.solve import get_solver, solve
 
     key = jax.random.PRNGKey(0) if key is None else key
     params, drift, diffusion, z0, bm = build_problem(key, dtype=dtype)
 
     def loss_dto(p, z):
-        traj = sde_solve(drift, diffusion, p, z, bm, 0.0, 1.0, num_steps,
-                         solver=solver, noise="general")
+        traj = solve(drift, diffusion, p, z, bm, 0.0, 1.0, num_steps,
+                     solver=solver, gradient_mode="discretise", noise="general")
         return jnp.sum(traj[-1] ** 2)
 
     g_dto = jax.grad(loss_dto, argnums=(0, 1))(params, z0)
 
-    if solver == "reversible_heun":
-        def loss_otd(p, z):
-            traj = reversible_heun_solve(drift, diffusion, p, z, bm, 0.0, 1.0,
-                                         num_steps, "general")
-            return jnp.sum(traj[-1] ** 2)
-    else:
-        def loss_otd(p, z):
-            zT = continuous_adjoint_solve(drift, diffusion, p, z, bm, 0.0, 1.0,
-                                          num_steps, solver=solver, noise="general")
-            return jnp.sum(zT ** 2)
+    adjoint_mode = ("reversible_adjoint"
+                    if "reversible_adjoint" in get_solver(solver).gradient_modes
+                    else "continuous_adjoint")
+
+    def loss_otd(p, z):
+        zT = solve(drift, diffusion, p, z, bm, 0.0, 1.0, num_steps,
+                   solver=solver, gradient_mode=adjoint_mode, noise="general",
+                   save_trajectory=False)
+        return jnp.sum(zT ** 2)
 
     g_otd = jax.grad(loss_otd, argnums=(0, 1))(params, z0)
     return relative_l1(g_otd, g_dto)

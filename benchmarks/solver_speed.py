@@ -1,10 +1,20 @@
 """Paper Tables 1/4/5 (speed axis): reversible Heun vs midpoint/Heun.
 
-Measures wall time + function evaluations (NFE) of a full
-forward+backward through an SDE-GAN-scale Neural SDE per solver.  The
-paper's headline: reversible Heun needs 1 NFE/step (vs 2) and computes the
-backward with the O(1)-memory exact adjoint — observed as the up-to-1.98×
-training-speed win in Table 1.
+All timings go through the unified :func:`repro.solve` front-end.  Three
+comparisons:
+
+1. **Solver × gradient-mode** (the paper's headline): wall time + NFE of a
+   full forward+backward through an SDE-GAN-scale Neural SDE.  Reversible
+   Heun needs 1 NFE/step (vs 2) and the O(1)-memory exact adjoint — the
+   up-to-1.98× training-speed win of Table 1.
+2. **Fused vs unfused**: the reversible-Heun hot loop with and without the
+   Pallas step kernels (``use_pallas_kernels``).  On TPU the fused kernels
+   collapse ~6 HBM round-trips per step into one read+write per operand;
+   on CPU they run in interpret mode, so treat the CPU number as a
+   correctness smoke, not a speed claim.
+3. **Batched vs looped**: ``repro.solve_batched`` (one vmapped XLA program
+   over a batch of initial states × Brownian seeds) against a Python loop
+   of single solves.
 """
 
 from __future__ import annotations
@@ -15,11 +25,20 @@ import jax
 import jax.numpy as jnp
 
 
+def _timeit(fn, *args, reps: int = 5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
 def bench_solver(solver: str, exact_adjoint: bool, num_steps: int = 64,
                  batch: int = 128, reps: int = 5):
-    from repro.core.adjoint import reversible_heun_solve
     from repro.core.brownian import BrownianPath
-    from repro.core.solvers import NFE_PER_STEP, sde_solve
+    from repro.core.solve import get_solver, solve
     from repro import nn
 
     key = jax.random.PRNGKey(0)
@@ -43,27 +62,81 @@ def bench_solver(solver: str, exact_adjoint: bool, num_steps: int = 64,
 
     z0 = jax.random.normal(kz, (batch, x_dim))
     bm = BrownianPath(kw, 0.0, 1.0, (batch, w_dim))
+    mode = "reversible_adjoint" if exact_adjoint else "discretise"
 
-    if exact_adjoint:
-        def loss(p):
-            traj = reversible_heun_solve(drift, diffusion, p, z0, bm, 0.0, 1.0,
-                                         num_steps, "general")
-            return jnp.mean(traj[-1] ** 2)
-    else:
-        def loss(p):
-            traj = sde_solve(drift, diffusion, p, z0, bm, 0.0, 1.0, num_steps,
-                             solver=solver, noise="general")
-            return jnp.mean(traj[-1] ** 2)
+    def loss(p):
+        traj = solve(drift, diffusion, p, z0, bm, 0.0, 1.0, num_steps,
+                     solver=solver, gradient_mode=mode, noise="general")
+        return jnp.mean(traj[-1] ** 2)
 
-    g = jax.jit(jax.grad(loss))
-    out = g(params)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = g(params)
-    jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / reps
-    return dt, NFE_PER_STEP[solver] * num_steps
+    dt = _timeit(jax.jit(jax.grad(loss)), params, reps=reps)
+    return dt, get_solver(solver).nfe_per_step * num_steps
+
+
+def bench_fused_vs_unfused(num_steps: int = 64, batch: int = 128,
+                           x_dim: int = 128, reps: int = 5):
+    """Reversible-Heun exact-adjoint training step, Pallas-fused vs not.
+
+    Diagonal noise (the fused kernels' layout); same problem either way, so
+    the ratio isolates the step-update fusion.
+    """
+    from repro.core.brownian import BrownianPath
+    from repro.core.solve import solve
+    from repro import nn
+
+    key = jax.random.PRNGKey(1)
+    kp1, kp2, kz, kw = jax.random.split(key, 4)
+    params = {"f": nn.mlp_init(kp1, [x_dim, 64, x_dim]),
+              "g": nn.mlp_init(kp2, [x_dim, 64, x_dim])}
+    drift = lambda p, t, x: nn.mlp(p["f"], x, nn.lipswish, jnp.tanh)
+    diffusion = lambda p, t, x: 0.2 * nn.mlp(p["g"], x, nn.lipswish, jnp.tanh)
+    z0 = jax.random.normal(kz, (batch, x_dim))
+    bm = BrownianPath(kw, 0.0, 1.0, (batch, x_dim))
+
+    def loss(p, fused):
+        traj = solve(drift, diffusion, p, z0, bm, 0.0, 1.0, num_steps,
+                     solver="reversible_heun",
+                     gradient_mode="reversible_adjoint",
+                     use_pallas_kernels=fused)
+        return jnp.mean(traj[-1] ** 2)
+
+    out = {}
+    for fused in (False, True):
+        g = jax.jit(jax.grad(lambda p: loss(p, fused)))
+        out["fused" if fused else "unfused"] = _timeit(g, params, reps=reps)
+    return out
+
+
+def bench_batched_vs_looped(batch: int = 32, num_steps: int = 64,
+                            x_dim: int = 32, reps: int = 3):
+    """One vmapped multi-trajectory solve vs a Python loop of solves."""
+    from repro.core.brownian import BrownianPath
+    from repro.core.solve import solve, solve_batched
+    from repro import nn
+
+    key = jax.random.PRNGKey(2)
+    kp1, kp2, kz, kk = jax.random.split(key, 4)
+    params = {"f": nn.mlp_init(kp1, [x_dim, 64, x_dim]),
+              "g": nn.mlp_init(kp2, [x_dim, 64, x_dim])}
+    drift = lambda p, t, x: nn.mlp(p["f"], x, nn.lipswish, jnp.tanh)
+    diffusion = lambda p, t, x: 0.2 * nn.mlp(p["g"], x, nn.lipswish, jnp.tanh)
+    z0 = jax.random.normal(kz, (batch, x_dim))
+    keys = jax.random.split(kk, batch)
+
+    batched = jax.jit(lambda z, k: solve_batched(
+        drift, diffusion, params, z, k, 0.0, 1.0, num_steps,
+        solver="reversible_heun"))
+
+    single = jax.jit(lambda z, k: solve(
+        drift, diffusion, params, z,
+        BrownianPath(k, 0.0, 1.0, (x_dim,)), 0.0, 1.0, num_steps,
+        solver="reversible_heun"))
+
+    def looped(z, ks):
+        return [single(z[i], ks[i]) for i in range(batch)]
+
+    return {"batched": _timeit(batched, z0, keys, reps=reps),
+            "looped": _timeit(looped, z0, keys, reps=reps)}
 
 
 def main(quick: bool = False):
@@ -80,6 +153,26 @@ def main(quick: bool = False):
         rows.append(("solver_speed", label, dt * 1e3))
         print(f"solver_speed,{label},{dt*1e3:.2f}ms,nfe={nfe},"
               f"speedup_vs_midpoint={speedup:.2f}x", flush=True)
+
+    fu = bench_fused_vs_unfused(num_steps=16 if quick else 64,
+                                batch=32 if quick else 128, reps=reps)
+    ratio = fu["unfused"] / fu["fused"]
+    backend = jax.default_backend()
+    for k, v in fu.items():
+        rows.append(("solver_speed_fusion", k, v * 1e3))
+        print(f"solver_speed_fusion,{k},{v*1e3:.2f}ms,backend={backend}",
+              flush=True)
+    print(f"solver_speed_fusion,fused_speedup,{ratio:.2f}x"
+          f"{' (interpret mode - correctness only)' if backend != 'tpu' else ''}",
+          flush=True)
+
+    bl = bench_batched_vs_looped(batch=8 if quick else 32,
+                                 num_steps=16 if quick else 64, reps=reps)
+    for k, v in bl.items():
+        rows.append(("solver_speed_batching", k, v * 1e3))
+        print(f"solver_speed_batching,{k},{v*1e3:.2f}ms", flush=True)
+    print(f"solver_speed_batching,batched_speedup,"
+          f"{bl['looped'] / bl['batched']:.2f}x", flush=True)
     return rows
 
 

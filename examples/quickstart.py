@@ -1,10 +1,12 @@
-"""Quickstart: the paper's three contributions in ~60 lines.
+"""Quickstart: the unified `repro.solve()` front-end in ~70 lines.
 
-1. Solve a Stratonovich SDE with the **reversible Heun** method.
-2. Backprop through it with the **O(1)-memory exact adjoint** and check the
-   gradients equal discretise-then-optimise to float precision.
-3. Sample Brownian increments with the **Brownian Interval** — exact,
-   cache-backed, reconstructible on the backward pass.
+1. Solve an Ornstein-Uhlenbeck process with every registered solver.
+2. Backprop in both gradient modes — discretise-then-optimise vs the
+   paper's **O(1)-memory exact adjoint** — and check they agree to float
+   precision.
+3. Batched multi-trajectory solving (`repro.solve_batched`) and the fused
+   Pallas hot loop (`use_pallas_kernels=True`).
+4. Sample the host-side **Brownian Interval** directly.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,51 +15,66 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import nn
-from repro.core.adjoint import reversible_heun_solve
+import repro
 from repro.core.brownian import BrownianPath
 from repro.core.brownian_interval import BrownianInterval
-from repro.core.solvers import sde_solve
 
 jax.config.update("jax_enable_x64", True)
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    k1, k2, kz, kw = jax.random.split(key, 4)
+    kz, kw, kb = jax.random.split(key, 3)
 
-    # --- a small Neural SDE: dX = μ_θ(X) dt + σ_θ(X) ∘ dW -------------------
-    params = {"mu": nn.mlp_init(k1, [4, 32, 4], dtype=jnp.float64),
-              "sigma": nn.mlp_init(k2, [4, 32, 4], dtype=jnp.float64)}
-    drift = lambda p, t, x: nn.mlp(p["mu"], x, nn.lipswish, jnp.tanh)
-    diffusion = lambda p, t, x: 0.2 * nn.mlp(p["sigma"], x, nn.lipswish, jnp.tanh)
+    # --- an Ornstein-Uhlenbeck process: dX = θ(μ − X) dt + σ ∘ dW ----------
+    params = {"theta": jnp.float64(1.2), "mu": jnp.float64(0.5),
+              "sigma": jnp.float64(0.3)}
+    drift = lambda p, t, x: p["theta"] * (p["mu"] - x)
+    diffusion = lambda p, t, x: p["sigma"] * jnp.ones_like(x)
 
     x0 = jax.random.normal(kz, (8, 4), jnp.float64)
-    bm = BrownianPath(kw, 0.0, 1.0, (8, 4), jnp.float64)   # counter-based, exact
+    bm = BrownianPath(kw, 0.0, 1.0, (8, 4), jnp.float64)
 
-    # --- 1. solve ------------------------------------------------------------
-    traj = reversible_heun_solve(drift, diffusion, params, x0, bm, 0.0, 1.0,
-                                 64, "diagonal")
-    print(f"solved: trajectory {traj.shape}, X_T mean {float(traj[-1].mean()):+.4f}")
+    # --- 1. one front door, four solvers ------------------------------------
+    for solver in repro.available_solvers():
+        traj = repro.solve(drift, diffusion, params, x0, bm, 0.0, 1.0, 64,
+                           solver=solver)
+        spec = repro.SOLVERS[solver]
+        print(f"{solver:16s} nfe/step={spec.nfe_per_step}  "
+              f"X_T mean {float(traj[-1].mean()):+.4f}")
 
-    # --- 2. exact gradients ----------------------------------------------------
-    def loss_exact(p):
-        t = reversible_heun_solve(drift, diffusion, p, x0, bm, 0.0, 1.0, 64, "diagonal")
+    # --- 2. both gradient modes agree to float precision ---------------------
+    def loss(p, gradient_mode):
+        t = repro.solve(drift, diffusion, p, x0, bm, 0.0, 1.0, 64,
+                        solver="reversible_heun", gradient_mode=gradient_mode)
         return jnp.mean(t[-1] ** 2)
 
-    def loss_dto(p):  # autodiff through the solver internals (O(N) memory)
-        t = sde_solve(drift, diffusion, p, x0, bm, 0.0, 1.0, 64,
-                      solver="reversible_heun")
-        return jnp.mean(t[-1] ** 2)
-
-    g1 = jax.grad(loss_exact)(params)
-    g2 = jax.grad(loss_dto)(params)
+    g_exact = jax.grad(loss)(params, "reversible_adjoint")  # O(1) memory
+    g_dto = jax.grad(loss)(params, "discretise")            # O(N) memory
     err = max(float(jnp.max(jnp.abs(a - b)))
-              for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+              for a, b in zip(jax.tree.leaves(g_exact), jax.tree.leaves(g_dto)))
     print(f"exact adjoint vs discretise-then-optimise: max |Δgrad| = {err:.2e}"
           f"  (float64 roundoff — the paper's Fig. 2)")
 
-    # --- 3. Brownian Interval -------------------------------------------------
+    # --- 3. batched trajectories + fused kernels -----------------------------
+    keys = jax.random.split(kb, 16)
+    ensemble = repro.solve_batched(drift, diffusion, params,
+                                   jnp.zeros((16, 4), jnp.float64), keys,
+                                   0.0, 1.0, 64, solver="reversible_heun")
+    print(f"batched: {ensemble.shape[0]} trajectories in one vmapped solve, "
+          f"terminal spread {float(ensemble[:, -1].std()):.4f}")
+
+    fused = repro.solve(drift, diffusion, params, x0, bm, 0.0, 1.0, 64,
+                        solver="reversible_heun",
+                        gradient_mode="reversible_adjoint",
+                        use_pallas_kernels=True)
+    unfused = repro.solve(drift, diffusion, params, x0, bm, 0.0, 1.0, 64,
+                          solver="reversible_heun",
+                          gradient_mode="reversible_adjoint")
+    print(f"pallas-fused vs unfused forward: max |Δ| = "
+          f"{float(jnp.max(jnp.abs(fused - unfused))):.2e}")
+
+    # --- 4. Brownian Interval -------------------------------------------------
     bi = BrownianInterval(0.0, 1.0, shape=(3,), seed=42)
     w_ab = bi(0.2, 0.7)
     w_half = bi(0.2, 0.45) + bi(0.45, 0.7)   # consistency under refinement

@@ -30,11 +30,19 @@ def main(argv=None):
                     help="'clip' = paper §5; 'gp' = WGAN-GP baseline")
     ap.add_argument("--solver", default="reversible_heun",
                     choices=("reversible_heun", "midpoint"))
+    ap.add_argument("--pallas", action="store_true",
+                    help="request the fused reversible-Heun hot loop "
+                         "(repro.solve use_pallas_kernels). NOTE: the fused "
+                         "kernels are diagonal-noise only, and every SDE-GAN "
+                         "solve uses general (matrix) noise — each solve "
+                         "warns and runs unfused. Kept as the config knob "
+                         "for diagonal-noise workloads (e.g. Latent SDE).")
     args = ap.parse_args(argv)
 
     cfg = NeuralSDEConfig(
         data_dim=1, hidden_dim=16, noise_dim=4, width=32, num_steps=31,
-        solver=args.solver, exact_adjoint=args.solver == "reversible_heun")
+        solver=args.solver, exact_adjoint=args.solver == "reversible_heun",
+        use_pallas_kernels=args.pallas)
     key = jax.random.PRNGKey(0)
     params = {"gen": generator_init(key, cfg),
               "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}

@@ -1,14 +1,43 @@
 """repro — 'Efficient and Accurate Gradients for Neural SDEs' as a
 production-grade multi-pod JAX framework.
 
-Paper contributions (repro.core):
-  * reversible Heun solver + O(1)-memory exact adjoint
-  * Brownian Interval (host reference) / BrownianPath (TPU-native)
-  * SDE-GAN training via Lipschitz clipping + LipSwish
+The front door is :func:`repro.solve` (re-exported from
+:mod:`repro.core.solve`): one entry point dispatching solver ×
+gradient-mode × noise-type through a solver registry, with
+:func:`repro.solve_batched` for vmapped multi-trajectory ensembles.
+
+Paper ↔ module cross-reference:
+
+=====================  =====================================================
+paper                  module
+=====================  =====================================================
+§2 (Neural SDE/GAN)    repro.core.sde (generator / CDE discriminator / joint
+                       solve), repro.core.losses (Wasserstein, sig-MMD)
+§3 / Alg. 1–2          repro.core.solvers (reversible Heun + inverse),
+                       repro.kernels.reversible_heun_step (fused steps)
+§3 / App. C (adjoint)  repro.core.adjoint (exact O(1)-memory custom VJP;
+                       continuous-adjoint baseline, eq. (6))
+§4 / Alg. 3–4          repro.core.brownian_interval (host Brownian Interval,
+                       LRU + search hints), repro.core.brownian
+                       (counter-based TPU-native BrownianPath) — DESIGN.md §2
+§5 (Lipschitz clip)    repro.core.clipping (hard projection, LipSwish in
+                       repro.nn)
+App. D (orders)        tests/test_solvers.py (strong order, stability region)
+App. E (Lévy area)     repro.core.brownian (space-time Lévy area, Davie W̃)
+=====================  =====================================================
 
 Framework substrates: repro.nn, repro.models (10-arch zoo), repro.optim,
 repro.data, repro.distributed, repro.checkpoint, repro.kernels (Pallas),
 repro.launch (mesh / dryrun / train / serve).
 """
 
-__version__ = "1.0.0"
+from .core.solve import (  # noqa: F401
+    GRADIENT_MODES,
+    SOLVERS,
+    SolverSpec,
+    available_solvers,
+    solve,
+    solve_batched,
+)
+
+__version__ = "1.1.0"

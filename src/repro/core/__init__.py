@@ -12,6 +12,16 @@ from .brownian_interval import BrownianInterval, HostVirtualBrownianTree  # noqa
 from .clipping import clip_lipschitz, clip_linear, clip_mlp, lipschitz_bound_mlp  # noqa: F401
 from .losses import signature, signature_mmd, time_augment, wasserstein_losses  # noqa: F401
 from .paths import LinearPathControl  # noqa: F401
+from .solve import (  # noqa: F401
+    GRADIENT_MODES,
+    SOLVERS,
+    SolverSpec,
+    available_solvers,
+    get_solver,
+    register_solver,
+    solve,
+    solve_batched,
+)
 from .solvers import (  # noqa: F401
     NFE_PER_STEP,
     RevHeunState,

@@ -56,7 +56,7 @@ def _float0_zeros(tree):
 # =============================================================================
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 5, 6, 7, 8, 9))
 def reversible_heun_solve(
     drift: Callable,
     diffusion: Callable,
@@ -67,18 +67,27 @@ def reversible_heun_solve(
     t1: float,
     num_steps: int,
     noise: str = "diagonal",
+    use_pallas: bool = False,
 ):
     """Solve the Stratonovich SDE with Algorithm 1; exact-gradient backward.
 
     Returns the trajectory ``(num_steps+1, *z0.shape)`` (index 0 is ``z0``).
     Losses may consume any subset of the trajectory; the backward pass
     injects each step's cotangent as it sweeps right-to-left.
+
+    ``use_pallas`` runs the forward scan and the backward's closed-form
+    state reconstruction through the fused Pallas kernels (diagonal noise
+    only).  The local per-step VJPs always use the unfused stepper — AD
+    never traces through the fused ops, so the flag composes with the exact
+    adjoint (unlike plain AD through :func:`repro.core.solvers.sde_solve`).
     """
-    traj, _final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise)
+    traj, _final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+                            use_pallas)
     return traj
 
 
-def _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
+def _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+             use_pallas=False):
     dt = (t1 - t0) / num_steps
     dtype = z0.dtype
     state0 = RevHeunState(z0, z0, drift(params, t0, z0), diffusion(params, t0, z0))
@@ -86,7 +95,8 @@ def _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
     def body(state, n):
         t = t0 + n * dt
         dw = bm.increment(n, num_steps).astype(dtype)
-        new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise)
+        new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
+                                   use_pallas=use_pallas)
         return new, new.z
 
     final, zs = lax.scan(body, state0, jnp.arange(num_steps))
@@ -94,13 +104,14 @@ def _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
     return traj, final
 
 
-def _fwd_rule(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
-    traj, final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise)
+def _fwd_rule(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise, use_pallas):
+    traj, final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+                           use_pallas)
     # O(1)-in-depth residuals: terminal solver state only (+ params, bm key).
     return traj, (params, final, bm)
 
 
-def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, residuals, g_traj):
+def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, use_pallas, residuals, g_traj):
     params, final, bm = residuals
     dt = (t1 - t0) / num_steps
     dtype = final.z.dtype
@@ -126,7 +137,8 @@ def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, residuals, g_traj):
         dw = bm.increment(n, num_steps).astype(dtype)
         # ---- reverse step: closed-form state reconstruction (Algorithm 2)
         state0 = reversible_heun_reverse_step(
-            state1, t1_local, dt, dw, drift, diffusion, params, noise
+            state1, t1_local, dt, dw, drift, diffusion, params, noise,
+            use_pallas=use_pallas,
         )
         # ---- local forward + local backward
         _, vjp = jax.vjp(
@@ -160,7 +172,7 @@ def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, residuals, g_traj):
 reversible_heun_solve.defvjp(_fwd_rule, _bwd_rule)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 5, 6, 7, 8, 9))
 def reversible_heun_solve_final(
     drift: Callable,
     diffusion: Callable,
@@ -171,6 +183,7 @@ def reversible_heun_solve_final(
     t1: float,
     num_steps: int,
     noise: str = "diagonal",
+    use_pallas: bool = False,
 ):
     """Terminal-value-only variant of :func:`reversible_heun_solve`.
 
@@ -179,11 +192,12 @@ def reversible_heun_solve_final(
     reversible *residual-stack* wrapper (models/reversible.py) uses: there
     ``num_steps`` is the network depth and the saving is activation memory.
     """
-    _traj, final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise)
+    _traj, final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+                            use_pallas)
     return final.z
 
 
-def _fwd_rule_final(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
+def _fwd_rule_final(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise, use_pallas):
     dt = (t1 - t0) / num_steps
     dtype = z0.dtype
     state0 = RevHeunState(z0, z0, drift(params, t0, z0), diffusion(params, t0, z0))
@@ -191,13 +205,14 @@ def _fwd_rule_final(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise):
     def body(state, n):
         t = t0 + n * dt
         dw = bm.increment(n, num_steps).astype(dtype)
-        return reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise), None
+        return reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
+                                    use_pallas=use_pallas), None
 
     final, _ = lax.scan(body, state0, jnp.arange(num_steps))
     return final.z, (params, final, bm)
 
 
-def _bwd_rule_final(drift, diffusion, t0, t1, num_steps, noise, residuals, g_zT):
+def _bwd_rule_final(drift, diffusion, t0, t1, num_steps, noise, use_pallas, residuals, g_zT):
     params, final, bm = residuals
     dt = (t1 - t0) / num_steps
     dtype = final.z.dtype
@@ -215,7 +230,8 @@ def _bwd_rule_final(drift, diffusion, t0, t1, num_steps, noise, residuals, g_zT)
         t1_local = t0 + (n + 1) * dt
         dw = bm.increment(n, num_steps).astype(dtype)
         state0 = reversible_heun_reverse_step(
-            state1, t1_local, dt, dw, drift, diffusion, params, noise)
+            state1, t1_local, dt, dw, drift, diffusion, params, noise,
+            use_pallas=use_pallas)
         _, vjp = jax.vjp(
             lambda p, z, zh, mu, sigma: local_forward(p, z, zh, mu, sigma, t1_local - dt, dw),
             params, state0.z, state0.zh, state0.mu, state0.sigma)

@@ -20,10 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import nn
-from .adjoint import reversible_heun_solve
 from .brownian import BrownianPath
 from .paths import LinearPathControl
-from .solvers import sde_solve
+from .solve import solve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +40,32 @@ class NeuralSDEConfig:
     t1: float = 1.0
     solver: str = "reversible_heun"
     exact_adjoint: bool = True
+    use_pallas_kernels: bool = False  # fused reversible-Heun hot loop
     dtype: object = jnp.float32
+
+
+def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise):
+    """All SDE-GAN / Latent-SDE solves go through the unified front-end.
+
+    ``use_pallas_kernels`` only applies where the fused kernels are legal:
+    diagonal noise under the exact adjoint (see the registry validation in
+    repro.core.solve) — e.g. the Latent SDE's posterior solve.  General
+    (matrix) noise falls back to the unfused path with a warning.
+    """
+    exact = cfg.exact_adjoint and cfg.solver == "reversible_heun"
+    mode = "reversible_adjoint" if exact else "discretise"
+    wants_fuse = getattr(cfg, "use_pallas_kernels", False)
+    fuse = wants_fuse and noise == "diagonal" and exact
+    if wants_fuse and not fuse:
+        import warnings
+
+        warnings.warn(
+            f"use_pallas_kernels requested but this solve cannot fuse "
+            f"(noise={noise!r}, exact_adjoint={exact}) — running unfused",
+            stacklevel=3)
+    return solve(drift, diffusion, params, z0, bm, 0.0, cfg.t1, num_steps,
+                 solver=cfg.solver, gradient_mode=mode, noise=noise,
+                 use_pallas_kernels=fuse)
 
 
 def _tcat(t, z):
@@ -85,12 +109,8 @@ def generator_sample(params, cfg: NeuralSDEConfig, key, batch: int):
     v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
     x0 = nn.mlp(params["zeta"], v, nn.lipswish)
     bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.noise_dim), cfg.dtype)
-    solve_args = (gen_drift(cfg), gen_diffusion(cfg), params, x0, bm, 0.0, cfg.t1,
-                  cfg.num_steps)
-    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
-        traj = reversible_heun_solve(*solve_args, "general")
-    else:
-        traj = sde_solve(*solve_args, solver=cfg.solver, noise="general")
+    traj = _cfg_solve(cfg, gen_drift(cfg), gen_diffusion(cfg), params, x0, bm,
+                      cfg.num_steps, "general")
     return nn.linear(params["ell"], traj)
 
 
@@ -137,11 +157,10 @@ def discriminate_path(params, cfg: NeuralSDEConfig, ys, exact_adjoint: Optional[
     control = LinearPathControl(jnp.concatenate([tt, ys], -1))
     h0 = nn.mlp(params["xi"], jnp.concatenate([tt[0], ys[0]], -1), nn.lipswish)
     exact = cfg.exact_adjoint if exact_adjoint is None else exact_adjoint
-    args = (disc_f(cfg), disc_g(cfg), params, h0, control, 0.0, cfg.t1, T)
-    if exact:
-        traj = reversible_heun_solve(*args, "general")
-    else:
-        traj = sde_solve(*args, solver=cfg.solver, noise="general")
+    mode = "reversible_adjoint" if exact else "discretise"
+    solver = "reversible_heun" if exact else cfg.solver
+    traj = solve(disc_f(cfg), disc_g(cfg), params, h0, control, 0.0, cfg.t1, T,
+                 solver=solver, gradient_mode=mode, noise="general")
     return nn.linear(params["m"], traj[-1])[..., 0]
 
 
@@ -192,11 +211,8 @@ def gan_score_fake(params, cfg: NeuralSDEConfig, key, batch: int):
     h0 = nn.mlp(params["disc"]["xi"], jnp.concatenate([t0f, y0], -1), nn.lipswish)
     u0 = jnp.concatenate([x0, h0], -1)
     bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.noise_dim), cfg.dtype)
-    args = (joint_drift(cfg), joint_diffusion(cfg), params, u0, bm, 0.0, cfg.t1, cfg.num_steps)
-    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
-        traj = reversible_heun_solve(*args, "general")
-    else:
-        traj = sde_solve(*args, solver=cfg.solver, noise="general")
+    traj = _cfg_solve(cfg, joint_drift(cfg), joint_diffusion(cfg), params, u0, bm,
+                      cfg.num_steps, "general")
     hT = traj[-1][..., cfg.hidden_dim:]
     score = nn.linear(params["disc"]["m"], hT)[..., 0]
     ys = nn.linear(params["gen"]["ell"], traj[..., : cfg.hidden_dim])
@@ -311,11 +327,8 @@ def latent_sde_loss(params, cfg: LatentSDEConfig, key, y_true):
 
     u0 = jnp.concatenate([x0, jnp.zeros((B, 1), cfg.dtype)], -1)
     bm = BrownianPath(kw, 0.0, cfg.t1, (B, cfg.hidden_dim + 1), cfg.dtype)
-    args = (post_drift, post_diffusion, aug_params, u0, bm, 0.0, cfg.t1, cfg.num_steps)
-    if cfg.exact_adjoint and cfg.solver == "reversible_heun":
-        traj = reversible_heun_solve(*args, "diagonal")
-    else:
-        traj = sde_solve(*args, solver=cfg.solver, noise="diagonal")
+    traj = _cfg_solve(cfg, post_drift, post_diffusion, aug_params, u0, bm,
+                      cfg.num_steps, "diagonal")
 
     xs = traj[..., : cfg.hidden_dim]                       # (N+1, B, x)
     kl_path = traj[-1][..., -1]                            # (B,)
@@ -342,6 +355,6 @@ def latent_sde_sample(params, cfg: LatentSDEConfig, key, batch: int):
         return _lsde_sigma(p, t, x)
 
     bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.hidden_dim), cfg.dtype)
-    traj = sde_solve(drift, diffusion, params, x0, bm, 0.0, cfg.t1, cfg.num_steps,
-                     solver=cfg.solver, noise="diagonal")
+    traj = solve(drift, diffusion, params, x0, bm, 0.0, cfg.t1, cfg.num_steps,
+                 solver=cfg.solver, gradient_mode="discretise", noise="diagonal")
     return nn.linear(params["ell"], traj)

@@ -1,0 +1,348 @@
+"""Unified SDE-solve front-end: one entry point, a solver registry, and
+first-class batched multi-trajectory solving.
+
+This is the `sdeint`-style surface the paper's pieces plug into
+(cf. Li et al. 2020's ``sdeint(..., method=, adjoint=)``): callers pick a
+``solver`` × ``gradient_mode`` × ``noise`` combination and
+:func:`solve` dispatches to
+
+* plain ``lax.scan`` + JAX AD (``gradient_mode="discretise"``,
+  discretise-then-optimise, O(N) activation memory),
+* the paper's algebraically-reversible exact adjoint
+  (``"reversible_adjoint"``, O(1) memory, FP-exact gradients — §3/App. C),
+* the optimise-then-discretise continuous adjoint baseline
+  (``"continuous_adjoint"``, eq. (6), O(√h) gradient error).
+
+Every solver is described by a :class:`SolverSpec` in :data:`SOLVERS`; the
+spec carries the stepper, its algebraic inverse (when one exists), the NFE
+accounting the paper's Tables 1/4/5 report, the strong order, and which
+gradient modes / fused-kernel paths are legal.  Validation therefore
+happens *once, by data* — adding a **discretise-mode** solver means
+registering a spec, not editing dispatch chains (the spec's stepper is
+dispatched into the scan).  The two adjoint backends are not (yet)
+stepper-generic: "reversible_adjoint" is implemented for the
+reversible-Heun pair and "continuous_adjoint" for the builtin
+midpoint/heun/euler backward integrators — :func:`solve` validates this
+eagerly rather than producing another solver's numerics silently.
+
+``use_pallas_kernels=True`` routes the reversible-Heun hot loop through the
+fused Pallas kernels (:mod:`repro.kernels.reversible_heun_step`): the
+forward scan and the backward's closed-form state reconstruction run
+fused; local per-step VJPs stay unfused (the kernels have no VJP rule).
+On non-TPU backends the kernels run in interpret mode automatically.
+
+Batched multi-trajectory solving (:func:`solve_batched`) vmaps a batch of
+initial states against a batch of Brownian seeds — one fused XLA program
+for the whole ensemble instead of a Python loop of solves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adjoint import (
+    continuous_adjoint_solve,
+    reversible_heun_solve,
+    reversible_heun_solve_final,
+)
+from .brownian import BrownianPath
+from .solvers import (
+    _euler_maruyama_step,
+    _heun_step,
+    _midpoint_step,
+    reversible_heun_reverse_step,
+    reversible_heun_step,
+    sde_solve,
+)
+
+__all__ = [
+    "GRADIENT_MODES",
+    "SOLVERS",
+    "SolverSpec",
+    "available_solvers",
+    "get_solver",
+    "register_solver",
+    "solve",
+    "solve_batched",
+]
+
+#: The three gradient paths of the paper's landscape (§2.3/§2.4).
+GRADIENT_MODES = ("discretise", "reversible_adjoint", "continuous_adjoint")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Registry entry describing one solver's capabilities.
+
+    Attributes:
+        name: registry key (the ``solver=`` string).
+        stepper: ``(z_or_state, t, dt, dw, drift, diffusion, params, noise)``
+            single-step function.
+        reverse_stepper: algebraic inverse of ``stepper`` or ``None`` for
+            non-reversible solvers.
+        nfe_per_step: drift+diffusion evaluations per step (paper §3).
+        strong_order: strong convergence order (multiplicative noise).
+        gradient_modes: subset of :data:`GRADIENT_MODES` this solver serves.
+        supports_pallas: whether the fused Pallas step kernels apply.
+        sde_type: "ito" or "stratonovich".
+        notes: one-line description (surfaced in README's inventory table).
+    """
+
+    name: str
+    stepper: Callable
+    reverse_stepper: Optional[Callable]
+    nfe_per_step: int
+    strong_order: float
+    gradient_modes: Tuple[str, ...]
+    supports_pallas: bool = False
+    sde_type: str = "stratonovich"
+    notes: str = ""
+
+    @property
+    def reversible(self) -> bool:
+        return self.reverse_stepper is not None
+
+
+SOLVERS: dict = {}
+
+
+def register_solver(spec: SolverSpec) -> SolverSpec:
+    """Add (or replace) a solver spec in the registry."""
+    for m in spec.gradient_modes:
+        if m not in GRADIENT_MODES:
+            raise ValueError(f"{spec.name}: unknown gradient mode {m!r}")
+    if "reversible_adjoint" in spec.gradient_modes and not spec.reversible:
+        raise ValueError(
+            f"{spec.name}: reversible_adjoint requires a reverse_stepper")
+    SOLVERS[spec.name] = spec
+    return spec
+
+
+def get_solver(name: str) -> SolverSpec:
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: {sorted(SOLVERS)}") from None
+
+
+def available_solvers() -> Tuple[str, ...]:
+    return tuple(sorted(SOLVERS))
+
+
+register_solver(SolverSpec(
+    "euler_maruyama", _euler_maruyama_step, None,
+    nfe_per_step=1, strong_order=0.5,
+    gradient_modes=("discretise", "continuous_adjoint"),
+    sde_type="ito", notes="order-0.5 Itô baseline"))
+
+register_solver(SolverSpec(
+    "midpoint", _midpoint_step, None,
+    nfe_per_step=2, strong_order=0.5,
+    gradient_modes=("discretise", "continuous_adjoint"),
+    notes="paper's main baseline"))
+
+register_solver(SolverSpec(
+    "heun", _heun_step, None,
+    nfe_per_step=2, strong_order=0.5,
+    gradient_modes=("discretise", "continuous_adjoint"),
+    notes="trapezoidal"))
+
+register_solver(SolverSpec(
+    "reversible_heun", reversible_heun_step, reversible_heun_reverse_step,
+    nfe_per_step=1, strong_order=0.5,
+    gradient_modes=("discretise", "reversible_adjoint"),
+    supports_pallas=True,
+    notes="algebraically reversible; O(1)-memory exact adjoint (paper §3)"))
+
+
+#: Solvers the continuous-adjoint backward integrator (adjoint.py) actually
+#: implements a time-reversed stepper for.  A registered solver outside this
+#: set would silently fall back to backward Euler — reject instead.
+_CONTINUOUS_ADJOINT_BACKWARDS = ("euler_maruyama", "midpoint", "heun")
+
+
+def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
+              use_pallas_kernels: bool, save_trajectory: bool) -> None:
+    if gradient_mode not in GRADIENT_MODES:
+        raise ValueError(
+            f"unknown gradient_mode {gradient_mode!r}; one of {GRADIENT_MODES}")
+    if gradient_mode not in spec.gradient_modes:
+        raise ValueError(
+            f"solver {spec.name!r} does not support gradient_mode="
+            f"{gradient_mode!r} (supported: {spec.gradient_modes})")
+    if (gradient_mode == "continuous_adjoint"
+            and spec.name not in _CONTINUOUS_ADJOINT_BACKWARDS):
+        raise ValueError(
+            f"solver {spec.name!r} declares continuous_adjoint but the "
+            f"continuous-adjoint backward integrator only implements "
+            f"{_CONTINUOUS_ADJOINT_BACKWARDS} (repro.core.adjoint); extend "
+            f"continuous_adjoint_solve before registering this combination")
+    if (gradient_mode == "reversible_adjoint"
+            and (spec.stepper is not reversible_heun_step
+                 or spec.reverse_stepper is not reversible_heun_reverse_step)):
+        raise ValueError(
+            f"solver {spec.name!r} declares reversible_adjoint but the exact "
+            f"adjoint is implemented for the reversible-Heun stepper pair "
+            f"(repro.core.adjoint); a custom reversible solver needs its own "
+            f"custom_vjp there")
+    if noise not in ("diagonal", "general"):
+        raise ValueError(f"unknown noise type {noise!r}")
+    if use_pallas_kernels:
+        if not spec.supports_pallas:
+            raise ValueError(
+                f"solver {spec.name!r} has no fused Pallas path "
+                f"(only: {[s.name for s in SOLVERS.values() if s.supports_pallas]})")
+        if noise != "diagonal":
+            raise ValueError(
+                "use_pallas_kernels requires diagonal noise (the fused "
+                "kernels are elementwise; general noise needs an einsum)")
+        if gradient_mode == "discretise":
+            raise ValueError(
+                "use_pallas_kernels is incompatible with gradient_mode="
+                "'discretise': pallas_call has no VJP rule, so plain AD "
+                "cannot trace through the fused step.  Use gradient_mode="
+                "'reversible_adjoint' instead — its forward pass is the "
+                "identical fused scan (so this also covers pure forward "
+                "simulation), and differentiating it gives the exact "
+                "adjoint with fused backward reconstruction")
+    if gradient_mode == "continuous_adjoint" and save_trajectory:
+        raise ValueError(
+            "continuous_adjoint backpropagates a terminal-value cotangent "
+            "only — call solve(..., save_trajectory=False)")
+
+
+def solve(
+    drift: Callable,
+    diffusion: Callable,
+    params,
+    z0: jax.Array,
+    bm: BrownianPath,
+    t0: float,
+    t1: float,
+    num_steps: int,
+    *,
+    solver: str = "reversible_heun",
+    gradient_mode: str = "discretise",
+    noise: str = "diagonal",
+    save_trajectory: bool = True,
+    use_pallas_kernels: bool = False,
+):
+    """Solve ``dZ = μ_θ dt + σ_θ ∘ dW`` on ``[t0, t1]`` in ``num_steps`` steps.
+
+    The single front door to the solver subsystem::
+
+        traj = repro.solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 64,
+                           solver="reversible_heun",
+                           gradient_mode="reversible_adjoint")
+
+    Args:
+        drift: ``(params, t, z) -> dz/dt`` (shape of ``z``).
+        diffusion: ``(params, t, z) -> σ`` — shape of ``z`` for diagonal
+            noise, ``(*z.shape, w)`` for general noise.
+        params: pytree of parameters passed to both vector fields.
+        z0: initial state.
+        bm: Brownian sample path (:class:`repro.core.brownian.BrownianPath`
+            or anything exposing ``increment(n, num_steps)``).
+        t0, t1, num_steps: uniform time grid.
+        solver: registry key — see :func:`available_solvers`.
+        gradient_mode: "discretise" (AD through the scan, O(N) memory),
+            "reversible_adjoint" (paper's exact O(1)-memory adjoint), or
+            "continuous_adjoint" (optimise-then-discretise baseline).
+        noise: "diagonal" or "general".
+        save_trajectory: return the full ``(num_steps+1, *z0.shape)``
+            trajectory (index 0 is ``z0``) instead of the terminal value.
+            Must be ``False`` for "continuous_adjoint".
+        use_pallas_kernels: fuse the reversible-Heun state updates through
+            the Pallas kernels (diagonal noise; forbidden with
+            "discretise" — the fused ops are not AD-traceable).
+
+    Returns:
+        Trajectory or terminal value, differentiable w.r.t. ``params`` and
+        ``z0`` according to ``gradient_mode``.
+    """
+    spec = get_solver(solver)
+    _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory)
+
+    if gradient_mode == "reversible_adjoint":
+        if save_trajectory:
+            return reversible_heun_solve(
+                drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+                use_pallas_kernels)
+        return reversible_heun_solve_final(
+            drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
+            use_pallas_kernels)
+
+    if gradient_mode == "continuous_adjoint":
+        return continuous_adjoint_solve(
+            drift, diffusion, params, z0, bm, t0, t1, num_steps,
+            solver=solver, noise=noise)
+
+    return sde_solve(
+        drift, diffusion, params, z0, bm, t0, t1, num_steps,
+        solver=solver, noise=noise, save_trajectory=save_trajectory,
+        use_pallas_kernels=use_pallas_kernels,
+        # registry-registered steppers (z-carried) dispatch through here;
+        # "reversible_heun" keeps sde_solve's carried-state fast path.
+        step_fn=None if solver == "reversible_heun" else spec.stepper)
+
+
+def solve_batched(
+    drift: Callable,
+    diffusion: Callable,
+    params,
+    z0: jax.Array,
+    keys: jax.Array,
+    t0: float,
+    t1: float,
+    num_steps: int,
+    *,
+    w_dim: Optional[int] = None,
+    **kwargs,
+):
+    """Vmapped multi-trajectory :func:`solve`: batch of initial states ×
+    batch of Brownian seeds, as one XLA program.
+
+    Args:
+        z0: ``(B, *state_shape)`` initial states.
+        keys: ``(B,)`` PRNG keys — one independent Brownian path per
+            trajectory (pass ``jax.random.split(key, B)``).
+        w_dim: Brownian dimension for general noise (defaults to the
+            trailing state dim, i.e. diagonal layout).
+        **kwargs: forwarded to :func:`solve` (solver / gradient_mode /
+            noise / save_trajectory / use_pallas_kernels); validated once
+            before vmapping so errors surface eagerly.
+
+    Returns:
+        ``(B, num_steps+1, *state_shape)`` trajectories (or ``(B, *state)``
+        terminal values with ``save_trajectory=False``).
+    """
+    if z0.ndim < 1 or keys.shape[0] != z0.shape[0]:
+        raise ValueError(
+            f"leading (batch) dims must agree: z0 {z0.shape} vs keys "
+            f"{keys.shape}")
+    spec = get_solver(kwargs.get("solver", "reversible_heun"))
+    _validate(spec,
+              kwargs.get("gradient_mode", "discretise"),
+              kwargs.get("noise", "diagonal"),
+              kwargs.get("use_pallas_kernels", False),
+              kwargs.get("save_trajectory", True))
+
+    state_shape = z0.shape[1:]
+    if kwargs.get("noise", "diagonal") == "general":
+        if w_dim is None:
+            raise ValueError("general noise needs w_dim= for the Brownian shape")
+        bm_shape = state_shape[:-1] + (w_dim,)
+    else:
+        bm_shape = state_shape
+
+    def single(z0_i, key_i):
+        bm = BrownianPath(key_i, t0, t1, bm_shape, z0.dtype)
+        return solve(drift, diffusion, params, z0_i, bm, t0, t1, num_steps,
+                     **kwargs)
+
+    return jax.vmap(single)(z0, keys)

@@ -25,6 +25,13 @@ reversible_heun    Stratonovich  **1 / step**           algebraically
 it with standard JAX AD gives discretise-then-optimise gradients (and O(N)
 activation memory).  The O(1)-memory exact adjoint lives in
 :mod:`repro.core.adjoint`.
+
+The reversible-Heun hot loop optionally runs through the fused Pallas
+kernels (:mod:`repro.kernels.reversible_heun_step`) via
+``use_pallas=True`` — see the kernel module docstring for the contract
+(diagonal noise, static dt, no AD through the fused ops).  Callers should
+normally go through the :func:`repro.core.solve.solve` front-end, which
+validates the flag against the solver registry.
 """
 
 from __future__ import annotations
@@ -65,6 +72,12 @@ def dw_shape(z_shape, w_dim: Optional[int], noise: str):
     return tuple(z_shape[:-1]) + (w_dim,)
 
 
+def pallas_interpret_default() -> bool:
+    """Interpret-mode default for the fused kernels: real compilation on
+    TPU, the Pallas interpreter everywhere else (CPU CI, tests)."""
+    return jax.default_backend() != "tpu"
+
+
 class RevHeunState(NamedTuple):
     """Carried state of the reversible Heun method (Algorithm 1)."""
 
@@ -74,9 +87,24 @@ class RevHeunState(NamedTuple):
     sigma: jax.Array
 
 
-def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, params, noise):
-    """One step of Algorithm 1.  Exactly one drift+diffusion evaluation."""
+def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, params, noise,
+                         use_pallas: bool = False, interpret: Optional[bool] = None):
+    """One step of Algorithm 1.  Exactly one drift+diffusion evaluation.
+
+    With ``use_pallas=True`` (diagonal noise, static ``dt`` only) the two
+    elementwise state updates run as fused Pallas kernels — AD must not
+    trace through this path (see the kernel module's contract).
+    """
     z, zh, mu, sigma = state
+    if use_pallas and noise == "diagonal":
+        from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+
+        interp = pallas_interpret_default() if interpret is None else interpret
+        zh1 = rev_heun_phase1(z, zh, mu, sigma, dw, dt=float(dt), interpret=interp)
+        mu1 = drift(params, t + dt, zh1)
+        sigma1 = diffusion(params, t + dt, zh1)
+        z1 = rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt=float(dt), interpret=interp)
+        return RevHeunState(z1, zh1, mu1, sigma1)
     zh1 = 2.0 * z - zh + mu * dt + apply_diffusion(sigma, dw, noise)
     mu1 = drift(params, t + dt, zh1)
     sigma1 = diffusion(params, t + dt, zh1)
@@ -84,13 +112,26 @@ def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, param
     return RevHeunState(z1, zh1, mu1, sigma1)
 
 
-def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusion, params, noise):
+def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusion, params, noise,
+                                 use_pallas: bool = False, interpret: Optional[bool] = None):
     """Algebraic inverse of :func:`reversible_heun_step` (Algorithm 2, reverse).
 
     Reconstructs ``(z_n, ẑ_n, μ_n, σ_n)`` from ``(z_{n+1}, ẑ_{n+1}, μ_{n+1},
-    σ_{n+1})`` in closed form — the paper's key property.
+    σ_{n+1})`` in closed form — the paper's key property.  ``use_pallas``
+    runs the same fused kernels with ``sign=-1`` (backward reconstruction).
     """
     z1, zh1, mu1, sigma1 = state
+    if use_pallas and noise == "diagonal":
+        from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+
+        interp = pallas_interpret_default() if interpret is None else interpret
+        zh = rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt=float(dt), sign=-1.0,
+                             interpret=interp)
+        mu = drift(params, t1 - dt, zh)
+        sigma = diffusion(params, t1 - dt, zh)
+        z = rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt=float(dt), sign=-1.0,
+                            interpret=interp)
+        return RevHeunState(z, zh, mu, sigma)
     zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
     mu = drift(params, t1 - dt, zh)
     sigma = diffusion(params, t1 - dt, zh)
@@ -129,6 +170,8 @@ def sde_solve(
     solver: str = "reversible_heun",
     noise: str = "diagonal",
     save_trajectory: bool = True,
+    use_pallas_kernels: bool = False,
+    step_fn: Optional[Callable] = None,
 ):
     """Solve ``dZ = μ dt + σ ∘ dW`` from ``t0`` to ``t1`` in ``num_steps`` steps.
 
@@ -136,6 +179,11 @@ def sde_solve(
     else the terminal value.  Differentiating through this function gives
     discretise-then-optimise gradients (O(N) memory).  For the paper's O(1)
     exact adjoint use :func:`repro.core.adjoint.reversible_heun_solve`.
+
+    ``use_pallas_kernels`` fuses the reversible-Heun state updates
+    (diagonal noise only).  The fused ops have no VJP rule, so this flag is
+    for forward simulation; for fused *training* use the exact adjoint via
+    :func:`repro.core.solve.solve` with ``gradient_mode="reversible_adjoint"``.
     """
     dt = (t1 - t0) / num_steps
     dtype = z0.dtype
@@ -146,7 +194,8 @@ def sde_solve(
         def body(state, n):
             t = t0 + n * dt
             dw = bm.increment(n, num_steps).astype(dtype)
-            new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise)
+            new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
+                                       use_pallas=use_pallas_kernels)
             return new, (new.z if save_trajectory else None)
 
         final, traj = lax.scan(body, state0, jnp.arange(num_steps))
@@ -154,11 +203,18 @@ def sde_solve(
             return jnp.concatenate([z0[None], traj], axis=0)
         return final.z
 
-    step = {
+    # ``step_fn`` lets the registry (repro.core.solve) dispatch solvers this
+    # module doesn't know about: any ``(z, t, dt, dw, drift, diffusion,
+    # params, noise) -> z`` stepper that carries the state itself.
+    step = step_fn or {
         "euler_maruyama": _euler_maruyama_step,
         "midpoint": _midpoint_step,
         "heun": _heun_step,
-    }[solver]
+    }.get(solver)
+    if step is None:
+        raise ValueError(
+            f"solver {solver!r} has no builtin stepper; pass step_fn= "
+            f"(repro.core.solve does this from the registry)")
 
     def body(z, n):
         t = t0 + n * dt

@@ -1,0 +1,101 @@
+"""Version-portable mesh APIs.
+
+The mesh surface moved between JAX releases: ``jax.sharding.get_abstract_mesh``
+/ ``jax.set_mesh`` / ``jax.sharding.AxisType`` only exist on newer versions,
+while older releases activate a mesh with ``with mesh:`` and track it in
+``jax._src.mesh.thread_resources``.  Everything in repro that needs the
+*ambient* mesh (sharding rules, launch plumbing, tests) goes through this
+module so the rest of the codebase is written against one API.
+
+Four helpers:
+
+* :func:`ambient_mesh` — the currently active (abstract or concrete) mesh,
+  or ``None`` when unsharded.
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` passed through
+  only where supported.
+* :func:`set_mesh` — context manager activating a mesh (``jax.set_mesh`` on
+  new JAX, the mesh's own context manager on old).
+* :func:`abstract_mesh` — construct an ``AbstractMesh`` across both
+  constructor signatures (shape-tuple vs axis_shapes/axis_names).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def _auto_axis_types(n: int):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def ambient_mesh():
+    """Return the active mesh (``Mesh`` or ``AbstractMesh``) or ``None``.
+
+    Checks the new-style ambient abstract mesh first (``jax.set_mesh``),
+    then the legacy ``with mesh:`` thread-resources slot.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            am = get()
+        except Exception:  # pragma: no cover - defensive
+            am = None
+        if am is not None and hasattr(am, "axis_names") and not am.empty:
+            return am
+    try:
+        from jax._src.mesh import thread_resources
+
+        pm = thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:  # pragma: no cover - internal layout moved
+        pass
+    return None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` that only requests Auto axis types where they exist."""
+    types = _auto_axis_types(len(tuple(axis_names)))
+    if types is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=types)
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Activate ``mesh`` for the dynamic extent of the block."""
+    setter = getattr(jax, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Construct ``jax.sharding.AbstractMesh`` on either constructor API."""
+    shapes = tuple(axis_shapes)
+    names = tuple(axis_names)
+    types = _auto_axis_types(len(names))
+    if types is not None:
+        try:
+            return jax.sharding.AbstractMesh(shapes, names, axis_types=types)
+        except TypeError:
+            pass
+    try:
+        return jax.sharding.AbstractMesh(shapes, names)
+    except TypeError:
+        # oldest signature: a single tuple of (name, size) pairs
+        return jax.sharding.AbstractMesh(tuple(zip(names, shapes)))

@@ -25,10 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .compat import ambient_mesh
+
 
 def active_mesh_axes() -> Tuple[str, ...]:
-    am = jax.sharding.get_abstract_mesh()
-    return tuple(am.axis_names) if (am is not None and not am.empty) else ()
+    am = ambient_mesh()
+    return tuple(am.axis_names) if am is not None else ()
 
 
 def dp_axes(axes: Optional[Tuple[str, ...]] = None):
@@ -43,8 +45,8 @@ def tp_axis(axes: Optional[Tuple[str, ...]] = None) -> Optional[str]:
 
 
 def tp_size() -> int:
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty:
+    am = ambient_mesh()
+    if am is None:
         return 1
     return dict(am.shape).get("model", 1)
 
@@ -152,8 +154,8 @@ def param_pspecs(params, num_experts: int = 0, serve_pure_tp: bool = False):
     HBM, serving replicates over dp and keeps only the model-axis shards.
     """
     axes = active_mesh_axes()
-    am = jax.sharding.get_abstract_mesh()
-    sizes = dict(am.shape) if (am is not None and not am.empty) else {}
+    am = ambient_mesh()
+    sizes = dict(am.shape) if am is not None else {}
     tp_n = sizes.get("model", 1)
     ep_ok = num_experts > 0 and tp_n > 1 and num_experts % tp_n == 0
 

@@ -1,4 +1,4 @@
-"""Fused reversible-Heun state updates (Algorithm 1) as Pallas TPU kernels.
+"""Fused reversible-Heun state updates (Algorithm 1/2) as Pallas TPU kernels.
 
 The solver's per-step arithmetic is pure elementwise VPU work: without
 fusion, XLA materialises each intermediate (2z, −ẑ, μΔt, σΔW, …) through
@@ -7,9 +7,38 @@ read + one write per operand — the solver loop is memory-bound, so this is
 the hot spot the paper's 1-NFE-per-step advantage exposes.
 
 Phase 1 computes ẑ_{n+1} (before the vector-field evaluation); phase 2
-computes z_{n+1} (after).  Diagonal-noise layout: all operands share the
-state shape, flattened to (rows, cols) with cols a multiple of the 128-lane
-VPU width where possible.
+computes z_{n+1} (after).  Both take a static ``sign``: ``+1.0`` is the
+forward step (Algorithm 1) and ``-1.0`` the algebraic inverse (Algorithm 2,
+used by the O(1)-memory backward reconstruction in
+:mod:`repro.core.adjoint`), which negates the Δt and ΔW terms in-kernel so
+no extra negated operand ever touches HBM.
+
+Kernel contract
+===============
+
+* **Noise layout**: diagonal noise only — ``z, ẑ, μ, σ, ΔW`` all share the
+  state shape.  General (matrix) noise needs an ``einsum`` per step and is
+  served by the unfused path in :mod:`repro.core.solvers`.
+* **Shapes/tiling**: operands are flattened to ``(rows, cols)`` with
+  ``cols = shape[-1]`` (1-D states become ``(1, n)``).  Block sizes are the
+  largest divisor of each dim from the preference ladder
+  ``(256|512, 256, 128, 64, …, 1)``, so *any* shape is legal, but
+  performance wants ``cols`` a multiple of the 128-lane VPU width and
+  ``rows`` a multiple of 8 (f32) / 16 (bf16) sublanes.
+* **dt is static**: ``dt`` (a Python float) is baked into the kernel at
+  trace time — fixed-step solvers re-use one compiled kernel for the whole
+  scan.  Traced step sizes must use the unfused path.
+* **Interpret mode**: ``interpret=True`` runs the kernel body under the
+  Pallas interpreter — required on CPU, and how CI validates the kernels
+  without a TPU (see tests/test_kernels.py and tests/test_solve.py).
+  Callers that auto-detect should pass ``interpret=(default backend is not
+  TPU)``; :func:`repro.core.solvers.pallas_interpret_default` does exactly
+  this.
+* **Differentiability**: ``pallas_call`` has no VJP rule — these kernels
+  must only appear where AD never traces through them: the custom-VJP
+  forward scan and the closed-form backward reconstruction.  The local
+  per-step VJPs in :mod:`repro.core.adjoint` deliberately use the unfused
+  stepper.  ``jax.vmap`` (batched multi-trajectory solving) IS supported.
 """
 
 from __future__ import annotations
@@ -21,20 +50,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _phase1_kernel(dt, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, o_ref):
+def _phase1_kernel(dt, sign, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, o_ref):
     o_ref[...] = (
         2.0 * z_ref[...]
         - zh_ref[...]
-        + mu_ref[...] * dt
-        + sig_ref[...] * dw_ref[...]
+        + mu_ref[...] * (sign * dt)
+        + (sign * sig_ref[...]) * dw_ref[...]
     )
 
 
-def _phase2_kernel(dt, z_ref, mu_ref, mu1_ref, sig_ref, sig1_ref, dw_ref, o_ref):
+def _phase2_kernel(dt, sign, z_ref, mu_ref, mu1_ref, sig_ref, sig1_ref, dw_ref, o_ref):
     o_ref[...] = (
         z_ref[...]
-        + (0.5 * dt) * (mu_ref[...] + mu1_ref[...])
-        + 0.5 * (sig_ref[...] + sig1_ref[...]) * dw_ref[...]
+        + (sign * 0.5 * dt) * (mu_ref[...] + mu1_ref[...])
+        + (sign * 0.5) * (sig_ref[...] + sig1_ref[...]) * dw_ref[...]
     )
 
 
@@ -63,13 +92,17 @@ def _call_elementwise(kernel, args, interpret: bool):
     return out.reshape(orig_shape)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "interpret"))
-def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("dt", "sign", "interpret"))
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, sign: float = 1.0,
+                    interpret: bool = True):
+    """ẑ_{n+1} = 2z − ẑ + sign·(μΔt + σΔW) — fused, one HBM pass."""
     return _call_elementwise(
-        functools.partial(_phase1_kernel, dt), (z, zh, mu, sigma, dw), interpret)
+        functools.partial(_phase1_kernel, dt, sign), (z, zh, mu, sigma, dw), interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "interpret"))
-def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("dt", "sign", "interpret"))
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, sign: float = 1.0,
+                    interpret: bool = True):
+    """z_{n+1} = z + sign·(½(μ+μ′)Δt + ½(σ+σ′)ΔW) — fused, one HBM pass."""
     return _call_elementwise(
-        functools.partial(_phase2_kernel, dt), (z, mu, mu1, sigma, sigma1, dw), interpret)
+        functools.partial(_phase2_kernel, dt, sign), (z, mu, mu1, sigma, sigma1, dw), interpret)

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
 from ..configs.base import ArchConfig, ShapeConfig
+from ..distributed.compat import set_mesh
 from ..distributed.sharding import param_pspecs
 from ..models.counting import model_flops_per_token, param_count
 from ..optim.optimizers import OptState
@@ -129,7 +130,7 @@ def opt_pspecs(params_pspecs):
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
                include_optimizer: bool = True):
     """Lower the step for one cell under ``mesh``.  Returns (lowered, kind)."""
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         specs = input_specs(cfg, shape)
         bspecs = batch_pspecs(specs, mesh)
         params_sds = abstract_params(cfg)

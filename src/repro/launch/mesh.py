@@ -13,14 +13,13 @@ Mesh layout (TPU v5e pods):
 
 from __future__ import annotations
 
-import jax
+from ..distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_devices(num_devices: int, model_parallel: int = 16):
@@ -29,5 +28,4 @@ def make_mesh_from_devices(num_devices: int, model_parallel: int = 16):
     from ..distributed.elastic import plan_mesh
 
     data, model = plan_mesh(num_devices, model_parallel)
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=axis_types)
+    return make_mesh((data, model), ("data", "model"))
