@@ -12,6 +12,11 @@ import time
 
 import numpy as np
 
+try:
+    from . import report
+except ImportError:  # run as a loose script: python benchmarks/brownian.py
+    import report
+
 
 def _intervals(n: int):
     ts = np.linspace(0.0, 1.0, n + 1)
@@ -52,10 +57,18 @@ def sde_solve_host(bi, n_steps: int, size: int):
     return y
 
 
-def main(quick: bool = False):
+PRESET_SHAPES = {
+    #          sizes, access reps, solve reps
+    "tiny":  ([1, 2560], 2, 2),
+    "quick": ([1, 2560], 3, 3),
+    "full":  ([1, 2560, 32768], 5, 3),
+}
+
+
+def main(preset: str = "full"):
     from repro.core.brownian_interval import BrownianInterval, HostVirtualBrownianTree
 
-    sizes = [1, 2560] if quick else [1, 2560, 32768]
+    sizes, access_reps, solve_reps = PRESET_SHAPES[preset]
     n_intervals = 100
     rows = []
     for size in sizes:
@@ -64,10 +77,10 @@ def main(quick: bool = False):
             t_bi = bench_access(
                 lambda: BrownianInterval(0.0, 1.0, shape, seed=1,
                                          preplant_dt=1.0 / n_intervals),
-                pattern, n_intervals)
+                pattern, n_intervals, reps=access_reps)
             t_vbt = bench_access(
                 lambda: HostVirtualBrownianTree(0.0, 1.0, shape, seed=1, eps=1e-5),
-                pattern, n_intervals)
+                pattern, n_intervals, reps=access_reps)
             rows.append(("brownian", f"{pattern},size={size}", t_vbt / t_bi))
             print(f"brownian,{pattern},size={size},interval={t_bi*1e3:.2f}ms,"
                   f"vbtree={t_vbt*1e3:.2f}ms,speedup={t_vbt/t_bi:.2f}x", flush=True)
@@ -77,7 +90,7 @@ def main(quick: bool = False):
     for size in sizes:
         t_bi = float("inf")
         t_vbt = float("inf")
-        for _ in range(3):
+        for _ in range(solve_reps):
             bi = BrownianInterval(0.0, 1.0, (size,), seed=2,
                                   preplant_dt=1.0 / n_intervals)
             t0 = time.perf_counter()
@@ -103,4 +116,4 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    report.standalone("brownian", main)

@@ -1,10 +1,21 @@
-"""Paper Table 3 / 11 (speed axis): clipping vs gradient penalty.
+"""Paper Table 3 / 11 (speed axis): careful clipping vs gradient penalty.
 
-Measures one discriminator update under (a) the paper's hard clipping +
-LipSwish recipe (single backward) and (b) WGAN-GP (double backward through
-the CDE solve).  The removal of the double backward is the 1.41× speedup of
-Table 11; reversible Heun adds the rest (1.87× total).
-Also verifies the clipped vector fields have Lipschitz bound ≤ 1.
+Times one full WGAN training step of the SDE-GAN subsystem
+(``repro.launch.steps.make_sde_gan_step``) under both Lipschitz regimes:
+
+* **clipping** — the paper's recipe: reversible Heun + exact adjoint, one
+  shared ``jax.vjp`` forward for both players, hard clipping as the tail of
+  the discriminator optimiser chain (single backward);
+* **grad_penalty** — the WGAN-GP baseline it replaces: midpoint +
+  discretise-then-optimise, double backward through the CDE solve plus an
+  extra generator solve for the interpolates.
+
+The removal of the double backward is the 1.41× speedup of Table 11;
+reversible Heun adds the rest (1.87× total).  Also verifies the clipped
+vector fields keep Lipschitz bound ≤ 1 after a real optimiser update.
+
+Run:  PYTHONPATH=src python benchmarks/clipping.py --preset tiny
+Emits BENCH_clipping.json (schema in benchmarks/report.py).
 """
 
 from __future__ import annotations
@@ -12,69 +23,111 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
+
+try:
+    from . import report
+except ImportError:  # run as a loose script: python benchmarks/clipping.py
+    import report
+
+# Shapes: solver steps must be high enough that the GP step's structural
+# extra work (double backward + interpolate CDE solve) dominates per-step
+# dispatch overhead, or the CI gate gets noisy — 8-step problems measure
+# the Python/XLA launch path, not the algorithms.
+PRESET_SHAPES = {
+    #          num_steps, seq_len, batch, reps
+    "tiny":  (16, 17, 32, 8),
+    "quick": (24, 25, 64, 8),
+    "full":  (31, 32, 128, 15),
+}
 
 
-def main(quick: bool = False):
-    from repro.core.clipping import clip_lipschitz, lipschitz_bound_mlp
-    from repro.core.sde import (NeuralSDEConfig, discriminator_init,
-                                discriminate_path, gradient_penalty)
-    from repro.data.synthetic import ou_process
-
-    reps = 3 if quick else 10
-    cfg = NeuralSDEConfig(num_steps=31, exact_adjoint=False, solver="midpoint")
-    key = jax.random.PRNGKey(0)
-    disc = discriminator_init(key, cfg)
-    y_real = ou_process(jax.random.fold_in(key, 1), 128, 32)
-    y_fake = ou_process(jax.random.fold_in(key, 2), 128, 32)
-
-    def disc_loss_plain(p):
-        return (jnp.mean(discriminate_path(p, cfg, y_fake))
-                - jnp.mean(discriminate_path(p, cfg, y_real)))
-
-    def disc_loss_gp(p):
-        gp = gradient_penalty(p, cfg, jax.random.fold_in(key, 3), y_real, y_fake)
-        return disc_loss_plain(p) + 10.0 * gp
-
-    # One full discriminator update per regime, all device work jitted:
-    #   clipping     : grad(plain loss) -> apply -> hard clip  (single bwd)
-    #   grad penalty : grad(plain + 10*GP)                     (double bwd)
-    def update_clip(p):
-        g = jax.grad(disc_loss_plain)(p)
-        p = jax.tree.map(lambda a, b: a - 1e-3 * b, p, g)
-        return clip_lipschitz(p)
-
-    def update_gp(p):
-        g = jax.grad(disc_loss_gp)(p)
-        return jax.tree.map(lambda a, b: a - 1e-3 * b, p, g)
-
-    rows = []
-    timings = {}
-    for name, fn in (("clipping", update_clip), ("grad_penalty", update_gp)):
-        step = jax.jit(fn)
-        out = step(disc)
-        jax.block_until_ready(out)
+def _time_step(step, params, g_state, d_state, key, reps: int) -> float:
+    """Best of ``reps`` individually-timed steps — the paper's protocol
+    ("errors in speed benchmarks are one-sided"): the min is robust to GC
+    pauses and scheduler noise on shared CI runners, which a mean is not."""
+    for _ in range(2):  # compile, then one warm run (caches, allocator)
+        out = step(params, g_state, d_state, key)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
         t0 = time.perf_counter()
-        for _ in range(reps):
-            out = step(disc)
+        out = step(params, g_state, d_state, key)
         jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / reps
-        timings[name] = dt
-        rows.append(("clipping", name, dt * 1e3))
-        print(f"clipping,{name},{dt*1e3:.2f}ms", flush=True)
-    sp = timings["grad_penalty"] / timings["clipping"]
-    print(f"clipping,speedup,{sp:.2f}x", flush=True)
-    rows.append(("clipping", "speedup", sp))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
-    # Lipschitz bound after clipping (must be <= 1 for f, g, xi)
-    clipped = clip_lipschitz(jax.tree.map(lambda x: x * 10.0, disc))
+
+def bench_constraint(constraint: str, num_steps: int, seq_len: int,
+                     batch: int, reps: int) -> float:
+    """Seconds per full WGAN step under the given Lipschitz regime."""
+    from repro.core.sde import NeuralSDEConfig, discriminator_init, generator_init
+    from repro.launch.steps import make_gan_optimizers, make_sde_gan_step
+
+    # The paper's pairing: clipping gets reversible Heun + exact adjoint;
+    # GP is stuck with discretise-then-optimise (no double-backward rule
+    # for the O(1)-memory adjoint) on the midpoint baseline.
+    clip = constraint == "clip"
+    cfg = NeuralSDEConfig(
+        num_steps=num_steps,
+        solver="reversible_heun" if clip else "midpoint",
+        exact_adjoint=clip)
+    key = jax.random.PRNGKey(0)
+    params = {"gen": generator_init(key, cfg),
+              "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
+    (gi, gu), (di, du) = make_gan_optimizers(lr=1.0, constraint=constraint)
+    g_state, d_state = gi(params["gen"]), di(params["disc"])
+    step = jax.jit(make_sde_gan_step(cfg, gu, du, batch, seq_len,
+                                     constraint=constraint))
+    return _time_step(step, params, g_state, d_state,
+                      jax.random.fold_in(key, 2), reps)
+
+
+def lipschitz_rows(num_steps: int, seq_len: int, batch: int):
+    """Bound ≤ 1 for f/g/xi after a *real* update step (not just a raw clip)."""
+    from repro.core.clipping import lipschitz_bound_mlp
+    from repro.core.sde import NeuralSDEConfig, discriminator_init, generator_init
+    from repro.launch.steps import make_gan_optimizers, make_sde_gan_step
+
+    cfg = NeuralSDEConfig(num_steps=num_steps)
+    key = jax.random.PRNGKey(7)
+    params = {"gen": generator_init(key, cfg),
+              "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
+    # blow the discriminator out of the constraint set, then take one step:
+    # the projection in the optimiser chain must land it back inside
+    params["disc"] = jax.tree.map(lambda x: x * 10.0, params["disc"])
+    (gi, gu), (di, du) = make_gan_optimizers(lr=1.0, constraint="clip")
+    step = jax.jit(make_sde_gan_step(cfg, gu, du, batch, seq_len))
+    params, _, _, _ = step(params, gi(params["gen"]), di(params["disc"]),
+                           jax.random.fold_in(key, 2))
+    rows = []
     for name in ("f", "g", "xi"):
-        b = float(lipschitz_bound_mlp(clipped[name]))
+        b = float(lipschitz_bound_mlp(params["disc"][name]))
         rows.append(("clipping", f"lipschitz_bound_{name}", b))
         print(f"clipping,lipschitz_bound_{name},{b:.3f}", flush=True)
-        assert b <= 1.0 + 1e-6, f"clipping failed to bound {name}"
+        assert b <= 1.0 + 1e-6, f"clipping failed to bound {name}: {b}"
+    return rows
+
+
+def main(preset: str = "full"):
+    num_steps, seq_len, batch, reps = PRESET_SHAPES[preset]
+    rows = []
+    timings = {}
+    for constraint, label in (("clip", "clipping"), ("gp", "grad_penalty")):
+        dt = bench_constraint(constraint, num_steps, seq_len, batch, reps)
+        timings[label] = dt
+        rows.append(("clipping", f"{label}_ms_per_step", dt * 1e3))
+        print(f"clipping,{label},{dt*1e3:.2f}ms", flush=True)
+    sp = timings["grad_penalty"] / timings["clipping"]
+    rows.append(("clipping", "speedup", sp))
+    print(f"clipping,speedup,{sp:.2f}x", flush=True)
+    # the paper's claim, and the CI gate: clipping is never slower than GP
+    assert timings["clipping"] <= timings["grad_penalty"], (
+        f"clipping ({timings['clipping']*1e3:.2f}ms) slower than gradient "
+        f"penalty ({timings['grad_penalty']*1e3:.2f}ms)")
+
+    rows.extend(lipschitz_rows(num_steps, seq_len, batch))
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    report.standalone("clipping", main)

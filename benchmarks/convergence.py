@@ -11,6 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from . import report
+except ImportError:  # run as a loose script
+    import report
+
 
 def run(solver: str, num_steps: int, bm, y0):
     from repro.core.solvers import sde_solve
@@ -42,9 +47,12 @@ def empirical_orders(solver: str, n_paths: int = 20_000):
     return fit(strong), fit(weak1)
 
 
-def main(quick: bool = False):
+PRESET_PATHS = {"tiny": 2_000, "quick": 5_000, "full": 50_000}
+
+
+def main(preset: str = "full"):
     jax.config.update("jax_enable_x64", True)
-    n_paths = 5_000 if quick else 50_000
+    n_paths = PRESET_PATHS[preset]
     rows = []
     for solver in ("heun", "reversible_heun"):
         s_ord, w_ord = empirical_orders(solver, n_paths)
@@ -57,4 +65,4 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    report.standalone("convergence", main)

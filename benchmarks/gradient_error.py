@@ -10,7 +10,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+try:
+    from . import report
+except ImportError:  # run as a loose script
+    import report
 
 
 def build_problem(key, batch=32, x_dim=32, w_dim=16, width=8, dtype=jnp.float64):
@@ -78,9 +82,16 @@ def gradient_error(solver: str, num_steps: int, key=None, dtype=jnp.float64):
     return relative_l1(g_otd, g_dto)
 
 
-def main(quick: bool = False):
+PRESET_STEPS = {
+    "tiny": [1, 4, 16],
+    "quick": [1, 4, 16, 64],
+    "full": [1, 4, 16, 64, 256, 1024],
+}
+
+
+def main(preset: str = "full"):
     jax.config.update("jax_enable_x64", True)
-    steps_list = [1, 4, 16, 64] if quick else [1, 4, 16, 64, 256, 1024]
+    steps_list = PRESET_STEPS[preset]
     rows = []
     for solver in ("midpoint", "heun", "reversible_heun"):
         for n in steps_list:
@@ -92,4 +103,4 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    report.standalone("gradient_error", main)

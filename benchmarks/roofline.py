@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 from pathlib import Path
 from typing import Any, Dict, Optional
 

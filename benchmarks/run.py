@@ -1,10 +1,13 @@
 """Benchmark suite entrypoint: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--preset tiny|quick|full] [--only NAME]
 
-Emits ``table,label,value`` CSV lines (each module also prints richer rows).
-The roofline harness (benchmarks/roofline.py) is run separately — it needs
-the 512-device XLA flag and hour-scale compiles; see EXPERIMENTS.md.
+Each suite prints ``table,label,value`` CSV lines and, on success, emits a
+schema-checked ``BENCH_<name>.json`` in the repo root (see
+benchmarks/report.py) — the machine-readable perf trajectory that CI's
+``bench-smoke`` job gates on.  The roofline harness
+(benchmarks/roofline.py) is run separately — it needs the 512-device XLA
+flag and hour-scale compiles; see EXPERIMENTS.md.
 """
 
 from __future__ import annotations
@@ -13,7 +16,7 @@ import argparse
 import sys
 import time
 
-from . import brownian, clipping, convergence, gradient_error, solver_speed
+from . import brownian, clipping, convergence, gradient_error, report, solver_speed
 
 SUITES = {
     "gradient_error": gradient_error.main,   # paper Fig. 2 / Table 6
@@ -26,18 +29,23 @@ SUITES = {
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=report.PRESETS, default="full",
+                    help="tiny = CI smoke; quick = laptop scale; full = "
+                         "paper scale")
     ap.add_argument("--quick", action="store_true",
-                    help="reduced reps/paths for CI-scale runs")
+                    help="alias for --preset quick (back-compat)")
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
     args = ap.parse_args(argv)
+    preset = "quick" if args.quick and args.preset == "full" else args.preset
 
     names = [args.only] if args.only else list(SUITES)
     failures = 0
     for name in names:
-        print(f"=== {name} ===", flush=True)
+        print(f"=== {name} ({preset}) ===", flush=True)
         t0 = time.time()
         try:
-            SUITES[name](quick=args.quick)
+            rows = SUITES[name](preset=preset)
+            report.write_bench(name, rows, preset)
             print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1

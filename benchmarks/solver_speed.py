@@ -24,6 +24,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+try:
+    from . import report
+except ImportError:  # run as a loose script
+    import report
+
 
 def _timeit(fn, *args, reps: int = 5):
     out = fn(*args)
@@ -139,14 +144,24 @@ def bench_batched_vs_looped(batch: int = 32, num_steps: int = 64,
             "looped": _timeit(looped, z0, keys, reps=reps)}
 
 
-def main(quick: bool = False):
-    reps = 3 if quick else 10
+PRESET_SHAPES = {
+    #          reps, solver num_steps/batch, fused num_steps/batch, looped batch/num_steps
+    "tiny":  (2, 16, 32, 8, 16, 4, 8),
+    "quick": (3, 64, 128, 16, 32, 8, 16),
+    "full":  (10, 64, 128, 64, 128, 32, 64),
+}
+
+
+def main(preset: str = "full"):
+    (reps, sv_steps, sv_batch, fu_steps, fu_batch,
+     bl_batch, bl_steps) = PRESET_SHAPES[preset]
     rows = []
     base = None
     for solver, exact in (("midpoint", False), ("heun", False),
                           ("reversible_heun", False), ("reversible_heun", True)):
         label = solver + ("+exact_adjoint" if exact else "")
-        dt, nfe = bench_solver(solver, exact, reps=reps)
+        dt, nfe = bench_solver(solver, exact, num_steps=sv_steps,
+                               batch=sv_batch, reps=reps)
         if solver == "midpoint":
             base = dt
         speedup = base / dt if base else 1.0
@@ -154,8 +169,7 @@ def main(quick: bool = False):
         print(f"solver_speed,{label},{dt*1e3:.2f}ms,nfe={nfe},"
               f"speedup_vs_midpoint={speedup:.2f}x", flush=True)
 
-    fu = bench_fused_vs_unfused(num_steps=16 if quick else 64,
-                                batch=32 if quick else 128, reps=reps)
+    fu = bench_fused_vs_unfused(num_steps=fu_steps, batch=fu_batch, reps=reps)
     ratio = fu["unfused"] / fu["fused"]
     backend = jax.default_backend()
     for k, v in fu.items():
@@ -166,8 +180,7 @@ def main(quick: bool = False):
           f"{' (interpret mode - correctness only)' if backend != 'tpu' else ''}",
           flush=True)
 
-    bl = bench_batched_vs_looped(batch=8 if quick else 32,
-                                 num_steps=16 if quick else 64, reps=reps)
+    bl = bench_batched_vs_looped(batch=bl_batch, num_steps=bl_steps, reps=reps)
     for k, v in bl.items():
         rows.append(("solver_speed_batching", k, v * 1e3))
         print(f"solver_speed_batching,{k},{v*1e3:.2f}ms", flush=True)
@@ -177,4 +190,4 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    report.standalone("solver_speed", main)

@@ -14,7 +14,6 @@ import time
 
 import jax
 
-from repro.configs import get_config
 from repro.launch.train import train
 
 

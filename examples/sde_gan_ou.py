@@ -12,14 +12,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import optim
 from repro.core import losses
-from repro.core.clipping import clip_lipschitz
-from repro.core.sde import (NeuralSDEConfig, discriminator_init, gan_losses,
+from repro.core.sde import (NeuralSDEConfig, discriminator_init,
                             generator_init, generator_sample)
 from repro.data.synthetic import ou_process
+from repro.launch.steps import make_gan_optimizers, make_sde_gan_step
 
 
 def main(argv=None):
@@ -48,47 +47,19 @@ def main(argv=None):
               "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
     data_key = jax.random.fold_in(key, 2)
 
-    gi, gu = optim.adadelta(lr=1.0)
-    di, du = optim.adadelta(lr=1.0)
+    # The shared WGAN step (repro.launch.steps): under "clip" one jax.vjp
+    # forward + careful clipping as the tail of the discriminator optimiser
+    # chain; under "gp" the double-backward WGAN-GP baseline.
+    (gi, gu), (di, du) = make_gan_optimizers(lr=1.0, constraint=args.constraint)
     g_state, d_state = gi(params["gen"]), di(params["disc"])
-
-    @jax.jit
-    def train_step(params, g_state, d_state, k):
-        y_real = ou_process(jax.random.fold_in(k, 0), args.batch, 32)
-
-        def d_loss(disc):
-            p = {"gen": params["gen"], "disc": disc}
-            _, dl, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, args.batch)
-            if args.constraint == "gp":
-                from repro.core.sde import gradient_penalty
-
-                fake = generator_sample(params["gen"], cfg,
-                                        jax.random.fold_in(k, 2), args.batch)
-                dl = dl + 10.0 * gradient_penalty(disc, cfg, jax.random.fold_in(k, 3),
-                                                  y_real, fake)
-            return dl
-
-        def g_loss(gen):
-            p = {"gen": gen, "disc": params["disc"]}
-            gl, _, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, args.batch)
-            return gl
-
-        dg = jax.grad(d_loss)(params["disc"])
-        upd, d_state2 = du(dg, d_state, params["disc"])
-        disc = optim.apply_updates(params["disc"], upd)
-        if args.constraint == "clip":
-            disc = clip_lipschitz(disc)           # the paper's hard projection
-
-        gg = jax.grad(g_loss)(params["gen"])
-        upd, g_state2 = gu(gg, g_state, params["gen"])
-        gen = optim.apply_updates(params["gen"], upd)
-        return {"gen": gen, "disc": disc}, g_state2, d_state2
+    train_step = jax.jit(make_sde_gan_step(cfg, gu, du, args.batch, 32,
+                                           constraint=args.constraint))
 
     swa, n_avg = None, 0
     t0 = time.time()
     for step in range(args.steps):
-        params, g_state, d_state = train_step(params, g_state, d_state,
-                                              jax.random.fold_in(data_key, step))
+        params, g_state, d_state, _ = train_step(params, g_state, d_state,
+                                                 jax.random.fold_in(data_key, step))
         if step >= args.steps // 2:               # SWA over the latter 50%
             swa = params["gen"] if swa is None else optim.swa_update(swa, params["gen"], n_avg)
             n_avg += 1

@@ -1,0 +1,5 @@
+"""Top-level launcher alias: ``PYTHONPATH=src python -m launch.train``.
+
+Thin re-export of :mod:`repro.launch` so launch commands don't need the
+package prefix.  All real code lives under ``repro/``.
+"""

@@ -1,0 +1,11 @@
+"""Alias for :mod:`repro.launch.train` — see that module for the driver.
+
+Usage::
+
+    PYTHONPATH=src python -m launch.train --workload sde-gan --steps 2
+"""
+
+from repro.launch.train import main, train, train_sde_gan  # noqa: F401
+
+if __name__ == "__main__":
+    main()

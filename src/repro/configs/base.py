@@ -118,5 +118,5 @@ LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
 
 def cell_is_runnable(arch: "ArchConfig", shape_name: str) -> Tuple[bool, str]:
     if shape_name == "long_500k" and arch.family not in LONG_CONTEXT_FAMILIES:
-        return False, "long_500k skipped: full-attention arch (see DESIGN.md §5)"
+        return False, "long_500k skipped: full-attention arch (see DESIGN.md §6)"
     return True, ""

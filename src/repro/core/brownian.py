@@ -23,7 +23,7 @@ hints, Algorithms 3/4) lives in :mod:`repro.core.brownian_interval`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

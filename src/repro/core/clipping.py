@@ -1,17 +1,35 @@
-"""SDE-GAN Lipschitz control without gradient penalty (paper §5).
+"""Careful clipping: SDE-GAN Lipschitz control without gradient penalty (§5).
 
 The discriminator CDE's vector fields must have Lipschitz constant ≤ 1 —
-the recurrent structure amplifies any λ > 1 to O(λ^T).  The paper's recipe:
+the recurrent structure amplifies any λ > 1 to O(λ^T).  The paper's recipe
+(DESIGN.md §4):
 
 * **hard clipping**: each linear map's entries are clipped into
   ``[-1/fan_in, 1/fan_in]`` after every optimiser update, enforcing
-  ``‖Ax‖∞ ≤ ‖x‖∞``;
+  ``‖Ax‖∞ ≤ ‖x‖∞`` (column ℓ1 sums ≤ 1);
 * **LipSwish** activations (Lipschitz 1, C²-smooth — required for solver
   convergence, Appendix D).
 
-Applied as a *functional transform* on the parameter pytree (JAX has no
-in-place ``clamp_``), keyed on the MLP parameter naming of
-:mod:`repro.nn.core`.
+Clipping is a *projection onto the constraint set applied after the
+optimiser update* — not gradient clipping, and not a loss penalty.  That
+ordering is the whole point: a penalty (WGAN-GP) needs a second backward
+pass through the CDE solve, which doubles the cost and is incompatible with
+the O(1)-memory reversible adjoint (no double-backward rule); a projection
+touches only the parameter pytree and costs one elementwise pass.
+
+Three layers of API, most-general first:
+
+* :func:`clip_pytree` — walk any parameter pytree and project every MLP
+  (``{"layers": [...]}`` subtree) it contains; bare Linears (readouts like
+  the discriminator's ``m``) pass through untouched.
+* :func:`clip_lipschitz` — the historical name-keyed entry point (clips the
+  ``f``/``g``/``xi`` MLPs of a discriminator tree); kept as the stable API.
+* :func:`lipschitz_projection` in :mod:`repro.optim` wraps either as an
+  optax-style ``(init, update)`` transform so the projection composes with
+  any optimiser chain.
+
+Everything is a functional transform on the pytree (JAX has no in-place
+``clamp_``), keyed on the MLP parameter naming of :mod:`repro.nn.core`.
 """
 
 from __future__ import annotations
@@ -34,8 +52,36 @@ def clip_mlp(params: dict) -> dict:
     return {"layers": [clip_linear(p) for p in params["layers"]]}
 
 
+def _is_mlp(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"layers"}
+
+
+def clip_pytree(tree):
+    """Project every MLP inside an arbitrary parameter pytree.
+
+    Structural, not name-keyed: any ``{"layers": [...]}`` subtree (the MLP
+    convention of :mod:`repro.nn.core`) is clipped per-layer; everything
+    else — bare Linears, norms, readouts — is returned unchanged.  This is
+    what makes the projection composable with optimisers that see only an
+    opaque pytree: no registry of which names are vector fields.
+    """
+    if _is_mlp(tree):
+        return clip_mlp(tree)
+    if isinstance(tree, dict):
+        return {k: clip_pytree(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(clip_pytree(v) for v in tree)
+    return tree
+
+
 def clip_lipschitz(tree, mlp_names=("f", "g", "xi")):
-    """Clip the named discriminator MLPs inside a parameter tree."""
+    """Clip the named discriminator MLPs inside a parameter tree.
+
+    The discriminator convention: vector fields ``f``/``g`` and the initial
+    network ``xi`` are constrained; the readout ``m`` is not (it is applied
+    once, not recurrently).  For trees following the nn.core MLP structure
+    this agrees with :func:`clip_pytree` restricted to those names.
+    """
     out = dict(tree)
     for name in mlp_names:
         if name in out:
@@ -43,9 +89,32 @@ def clip_lipschitz(tree, mlp_names=("f", "g", "xi")):
     return out
 
 
-def lipschitz_bound_mlp(params: dict) -> float:
-    """Upper bound on the MLP's ∞-norm Lipschitz constant (∏ max row-ℓ1)."""
+# -----------------------------------------------------------------------------
+# diagnostics — used by tests and benchmarks/clipping.py
+# -----------------------------------------------------------------------------
+
+
+def lipschitz_bound_mlp(params: dict) -> jax.Array:
+    """Upper bound on the MLP's ∞-norm Lipschitz constant (∏ max col-ℓ1)."""
     bound = 1.0
     for p in params["layers"]:
         bound = bound * jnp.max(jnp.sum(jnp.abs(p["w"]), axis=0))
     return bound
+
+
+def per_layer_violation(params: dict) -> jax.Array:
+    """Max over layers of ``fan_in · max|w|`` — ≤ 1 iff every entry is inside
+    its clipping box.  The per-layer bound the careful-clipping tests pin."""
+    v = jnp.asarray(0.0)
+    for p in params["layers"]:
+        v = jnp.maximum(v, p["w"].shape[0] * jnp.max(jnp.abs(p["w"])))
+    return v
+
+
+def max_lipschitz_bound(tree, mlp_names=("f", "g", "xi")) -> jax.Array:
+    """Worst ∞-norm Lipschitz bound across the named MLPs of a tree."""
+    b = jnp.asarray(0.0)
+    for name in mlp_names:
+        if name in tree:
+            b = jnp.maximum(b, lipschitz_bound_mlp(tree[name]))
+    return b

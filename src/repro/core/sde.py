@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import nn
+from ..nn.core import tcat as _tcat  # the shared time-augmentation convention
 from .brownian import BrownianPath
 from .paths import LinearPathControl
 from .solve import solve
@@ -68,11 +69,6 @@ def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise):
                  use_pallas_kernels=fuse)
 
 
-def _tcat(t, z):
-    tt = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
-    return jnp.concatenate([tt, z], -1)
-
-
 # =============================================================================
 # Generator
 # =============================================================================
@@ -119,31 +115,26 @@ def generator_sample(params, cfg: NeuralSDEConfig, key, batch: int):
 # =============================================================================
 
 
+def _disc_spec(cfg: NeuralSDEConfig) -> nn.CDEDiscriminatorSpec:
+    return nn.CDEDiscriminatorSpec(
+        data_dim=cfg.data_dim, hidden_dim=cfg.disc_hidden_dim,
+        width=cfg.disc_width, depth=cfg.disc_depth, dtype=cfg.dtype)
+
+
 def discriminator_init(key, cfg: NeuralSDEConfig):
-    kx, kf, kg, km = jax.random.split(key, 4)
-    hid = [cfg.disc_width] * cfg.disc_depth
-    h, y, d = cfg.disc_hidden_dim, cfg.data_dim, cfg.dtype
-    return {
-        "xi": nn.mlp_init(kx, [1 + y] + hid + [h], dtype=d),
-        "f": nn.mlp_init(kf, [1 + h] + hid + [h], dtype=d),
-        "g": nn.mlp_init(kg, [1 + h] + hid + [h * (1 + y)], dtype=d),
-        "m": nn.linear_init(km, h, 1, dtype=d),
-    }
+    """Init the Lipschitz-constrained CDE stack (repro.nn.cde): xi/f/g start
+    inside the careful-clipping box, the readout m is unconstrained."""
+    return nn.cde_discriminator_init(key, _disc_spec(cfg))
 
 
 def disc_f(cfg):
-    def f(params, t, h):
-        return nn.mlp(params["f"], _tcat(t, h), nn.lipswish, jnp.tanh)
-    return f
+    return nn.cde_drift(_disc_spec(cfg))
 
 
 def disc_g(cfg):
     """g_φ maps h -> (h, 1+y): the CDE is driven by the time-augmented path
     (t, Y_t) so the vector field sees dt through the control as well."""
-    def g(params, t, h):
-        out = nn.mlp(params["g"], _tcat(t, h), nn.lipswish, jnp.tanh)
-        return out.reshape(h.shape[:-1] + (cfg.disc_hidden_dim, 1 + cfg.data_dim))
-    return g
+    return nn.cde_control_field(_disc_spec(cfg))
 
 
 def discriminate_path(params, cfg: NeuralSDEConfig, ys, exact_adjoint: Optional[bool] = None):
@@ -155,13 +146,13 @@ def discriminate_path(params, cfg: NeuralSDEConfig, ys, exact_adjoint: Optional[
     ts = jnp.linspace(0.0, cfg.t1, T + 1, dtype=ys.dtype)
     tt = jnp.broadcast_to(ts[:, None, None], ys.shape[:-1] + (1,))
     control = LinearPathControl(jnp.concatenate([tt, ys], -1))
-    h0 = nn.mlp(params["xi"], jnp.concatenate([tt[0], ys[0]], -1), nn.lipswish)
+    h0 = nn.cde_initial(params, ts[0], ys[0])
     exact = cfg.exact_adjoint if exact_adjoint is None else exact_adjoint
     mode = "reversible_adjoint" if exact else "discretise"
     solver = "reversible_heun" if exact else cfg.solver
     traj = solve(disc_f(cfg), disc_g(cfg), params, h0, control, 0.0, cfg.t1, T,
                  solver=solver, gradient_mode=mode, noise="general")
-    return nn.linear(params["m"], traj[-1])[..., 0]
+    return nn.cde_readout(params, traj[-1])
 
 
 # =============================================================================
@@ -207,14 +198,13 @@ def gan_score_fake(params, cfg: NeuralSDEConfig, key, batch: int):
     v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
     x0 = nn.mlp(params["gen"]["zeta"], v, nn.lipswish)
     y0 = nn.linear(params["gen"]["ell"], x0)
-    t0f = jnp.zeros(y0.shape[:-1] + (1,), cfg.dtype)
-    h0 = nn.mlp(params["disc"]["xi"], jnp.concatenate([t0f, y0], -1), nn.lipswish)
+    h0 = nn.cde_initial(params["disc"], 0.0, y0)
     u0 = jnp.concatenate([x0, h0], -1)
     bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.noise_dim), cfg.dtype)
     traj = _cfg_solve(cfg, joint_drift(cfg), joint_diffusion(cfg), params, u0, bm,
                       cfg.num_steps, "general")
     hT = traj[-1][..., cfg.hidden_dim:]
-    score = nn.linear(params["disc"]["m"], hT)[..., 0]
+    score = nn.cde_readout(params["disc"], hT)
     ys = nn.linear(params["gen"]["ell"], traj[..., : cfg.hidden_dim])
     return score, ys
 

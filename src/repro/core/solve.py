@@ -42,7 +42,6 @@ import dataclasses
 from typing import Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from .adjoint import (
     continuous_adjoint_solve,

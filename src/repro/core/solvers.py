@@ -36,7 +36,6 @@ validates the flag against the solver registry.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax

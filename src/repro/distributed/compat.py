@@ -22,7 +22,7 @@ Four helpers:
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .compat import ambient_mesh
@@ -70,6 +69,28 @@ def hint(x: jax.Array, *dims) -> jax.Array:
 
 def batch_pspec(batch_dim_first: bool = True) -> P:
     return P(dp_axes()) if batch_dim_first else P(None, dp_axes())
+
+
+def time_major_pspec() -> P:
+    """Spec for (T+1, batch, ...) path tensors — the SDE/CDE layout.
+
+    Batch on the data axes, the time axis replicated: every solver step is a
+    sequential dependency, so sharding time would serialise cross-device.
+    The SDE-GAN step (DESIGN.md §4) shards *only* batch; parameters are tiny
+    MLPs and stay replicated, so the per-step collective cost is one psum of
+    scalar losses + parameter-sized gradient all-reduces.
+    """
+    return P(None, dp_axes())
+
+
+def shard_time_major(x: jax.Array) -> jax.Array:
+    """Constrain a (T+1, batch, ...) tensor to the time-major layout; no-op
+    without a mesh.  Use inside jit (the GAN step) so GSPMD propagates the
+    batch sharding through all three SDE/CDE solves."""
+    axes = active_mesh_axes()
+    if not axes or dp_axes(axes) is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, time_major_pspec())
 
 
 # -----------------------------------------------------------------------------

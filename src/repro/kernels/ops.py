@@ -4,7 +4,7 @@ Policy: on a TPU backend the compiled kernels run natively; on CPU/GPU the
 pure-jnp oracle runs (fast + lets XLA fuse).  ``use_kernel=True`` forces the
 Pallas path with ``interpret=True`` off-TPU — this is what the kernel tests
 exercise.  The dry-run/roofline path uses the reference implementations so
-`cost_analysis()` reflects the XLA graph (see DESIGN.md §4).
+`cost_analysis()` reflects the XLA graph (see DESIGN.md §5).
 """
 
 from __future__ import annotations

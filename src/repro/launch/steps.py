@@ -39,6 +39,125 @@ def make_train_step(cfg: ArchConfig, opt_update=None, grad_clip: float = 1.0):
     return train_step
 
 
+# -----------------------------------------------------------------------------
+# SDE-GAN (paper §5; DESIGN.md §4)
+# -----------------------------------------------------------------------------
+
+
+def make_gan_optimizers(lr: float = 1.0, constraint: str = "clip"):
+    """Paper Appendix F: Adadelta for both players.  Under ``"clip"`` the
+    discriminator chain ends in the careful-clipping projection — clip
+    applied *after* the optimiser update, as a composable transform rather
+    than a hand-written post-step, so swapping the optimiser never silently
+    drops the constraint.  ``"gp"`` (the baseline) leaves the discriminator
+    unconstrained — the penalty lives in the loss instead.
+
+    Returns ``((g_init, g_update), (d_init, d_update))``.
+    """
+    from ..core.clipping import clip_lipschitz
+
+    if constraint not in ("clip", "gp"):
+        raise ValueError(f"constraint must be 'clip' or 'gp', got {constraint!r}")
+    gen_opt = optim.adadelta(lr)
+    if constraint == "clip":
+        disc_opt = optim.chain(
+            optim.adadelta(lr),
+            optim.lipschitz_projection(clip_lipschitz),
+        )
+    else:
+        disc_opt = optim.adadelta(lr)
+    return gen_opt, disc_opt
+
+
+def make_sde_gan_step(cfg, g_update, d_update, batch: int, seq_len: int,
+                      constraint: str = "clip", gp_weight: float = 10.0):
+    """Build the WGAN step: ``(params, g_state, d_state, key) ->
+    (params, g_state, d_state, metrics)``.
+
+    ``constraint="clip"`` (the paper's recipe) runs the generator forward —
+    generator solve + joint generator/discriminator solve + real-path CDE
+    solve — exactly **once** per step via ``jax.vjp``, then pulls two
+    cotangents (one per player) through the reversible-Heun exact adjoint.
+    That halves the solve count versus ``jax.grad`` per player, and the
+    Lipschitz constraint costs one elementwise projection inside
+    ``d_update`` (no second backward anywhere).
+
+    ``constraint="gp"`` is the WGAN-GP baseline the paper replaces: the
+    penalty term is a gradient *of a gradient* through the CDE solve, so it
+    cannot share the forward and must run discretise-then-optimise
+    (``benchmarks/clipping.py`` measures the difference).
+
+    Batch-parallel: path tensors are constrained to the time-major layout
+    (batch on the mesh's data axes, time replicated) so GSPMD shards all
+    solves by batch while parameters stay replicated.
+    """
+    from ..core.sde import gan_losses, gradient_penalty
+    from ..data.synthetic import ou_process
+    from ..distributed.sharding import shard_time_major
+
+    def clip_step(params, g_state, d_state, k):
+        y_real = shard_time_major(ou_process(jax.random.fold_in(k, 0),
+                                             batch, seq_len, dtype=cfg.dtype))
+
+        # One shared forward (generator solve + joint solve + CDE solve),
+        # two cotangent pulls — instead of jax.grad per player re-running
+        # the full SDE solves.
+        def both_losses(gen, disc):
+            p = {"gen": gen, "disc": disc}
+            gl, dl, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, batch)
+            return gl, dl
+
+        (gl, dl), vjp = jax.vjp(both_losses, params["gen"], params["disc"])
+        one, zero = jnp.ones_like(gl), jnp.zeros_like(gl)
+        gg, _ = vjp((one, zero))
+        _, dg = vjp((zero, one))
+
+        upd, d_state = d_update(dg, d_state, params["disc"])
+        disc = optim.apply_updates(params["disc"], upd)  # projection folded in
+        upd, g_state = g_update(gg, g_state, params["gen"])
+        gen = optim.apply_updates(params["gen"], upd)
+        metrics = {"gen_loss": gl, "disc_loss": dl, "wasserstein": -dl}
+        return {"gen": gen, "disc": disc}, g_state, d_state, metrics
+
+    def gp_step(params, g_state, d_state, k):
+        y_real = shard_time_major(ou_process(jax.random.fold_in(k, 0),
+                                             batch, seq_len, dtype=cfg.dtype))
+
+        def d_loss(disc):
+            p = {"gen": params["gen"], "disc": disc}
+            _, dl, fake = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, batch)
+            # reuse the fake paths the loss already solved for (no second
+            # generator solve); GP interpolates are constants w.r.t. φ
+            fake = jax.lax.stop_gradient(fake)
+            return dl + gp_weight * gradient_penalty(
+                disc, cfg, jax.random.fold_in(k, 3), y_real, fake), dl
+
+        def g_loss(gen):
+            p = {"gen": gen, "disc": params["disc"]}
+            gl, _, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, batch)
+            return gl
+
+        (_, dl), dg = jax.value_and_grad(d_loss, has_aux=True)(params["disc"])
+        upd, d_state = d_update(dg, d_state, params["disc"])
+        disc = optim.apply_updates(params["disc"], upd)
+        gl, gg = jax.value_and_grad(g_loss)(params["gen"])
+        upd, g_state = g_update(gg, g_state, params["gen"])
+        gen = optim.apply_updates(params["gen"], upd)
+        metrics = {"gen_loss": gl, "disc_loss": dl, "wasserstein": -dl}
+        return {"gen": gen, "disc": disc}, g_state, d_state, metrics
+
+    if constraint not in ("clip", "gp"):
+        raise ValueError(f"constraint must be 'clip' or 'gp', got {constraint!r}")
+    if constraint == "gp" and seq_len != cfg.num_steps + 1:
+        # the GP interpolates eps*y_real + (1-eps)*y_fake need both paths on
+        # the same grid; fail eagerly instead of a broadcast error inside jit
+        raise ValueError(
+            f"gp constraint requires seq_len == num_steps + 1 so real and "
+            f"fake paths share a grid; got seq_len={seq_len}, "
+            f"num_steps={cfg.num_steps}")
+    return clip_step if constraint == "clip" else gp_step
+
+
 def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
     """(params, batch) -> (last-token logits, populated caches)."""
 

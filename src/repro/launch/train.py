@@ -136,23 +136,49 @@ def train(arch: str, steps: int, batch: int, seq: int, ckpt_dir: Optional[str],
     return params, losses
 
 
+def _gan_mesh(batch: int):
+    """Data-parallel mesh over every visible device (1-device ⇒ no mesh).
+
+    The GAN step is pure batch parallelism (DESIGN.md §4): parameters are
+    tiny and replicated; only the sample batch shards.  Simulate a multi-
+    device host with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (the ``--host-devices`` flag below does this for you).
+    """
+    from ..distributed.compat import make_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev <= 1:
+        return None
+    if batch % n_dev != 0:
+        print(f"[sde-gan] batch {batch} not divisible by {n_dev} devices — "
+              f"running unsharded", flush=True)
+        return None
+    return make_mesh((n_dev,), ("data",))
+
+
 def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
                   ckpt_every: int = 50, seed: int = 0, log_every: int = 10,
                   solver: str = "reversible_heun", use_pallas: bool = False,
-                  num_steps: int = 31, seq_len: int = 32):
+                  num_steps: int = 31, seq_len: int = 32,
+                  constraint: str = "clip"):
     """SDE-GAN training (paper §5) through the :func:`repro.solve` front-end.
 
     The generator sample, joint generator+discriminator solve, and CDE
     discriminator all dispatch through the solver registry — reversible
     Heun with the exact adjoint by default (``gradient_mode`` is derived
-    from the config inside repro.core.sde).
+    from the config inside repro.core.sde).  The step itself comes from
+    :func:`repro.launch.steps.make_sde_gan_step`: one shared forward per
+    step via ``jax.vjp``, careful clipping as the tail of the discriminator
+    optimiser chain, batch sharded over the data-parallel mesh.
     """
-    from .. import optim
-    from ..core.clipping import clip_lipschitz
+    import contextlib
+
     from ..core.losses import signature_mmd
-    from ..core.sde import (NeuralSDEConfig, discriminator_init, gan_losses,
+    from ..core.sde import (NeuralSDEConfig, discriminator_init,
                             generator_init, generator_sample)
     from ..data.synthetic import ou_process
+    from ..distributed.compat import set_mesh
+    from .steps import make_gan_optimizers, make_sde_gan_step
 
     cfg = NeuralSDEConfig(
         data_dim=1, hidden_dim=16, noise_dim=4, width=32, num_steps=num_steps,
@@ -163,60 +189,58 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
               "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
     data_key = jax.random.fold_in(key, 2)
 
-    gi, gu = optim.adadelta(lr=1.0)
-    di, du = optim.adadelta(lr=1.0)
+    (gi, gu), (di, du) = make_gan_optimizers(lr=1.0, constraint=constraint)
     g_state, d_state = gi(params["gen"]), di(params["disc"])
-
-    @jax.jit
-    def step_fn(params, g_state, d_state, k):
-        y_real = ou_process(jax.random.fold_in(k, 0), batch, seq_len)
-
-        # One shared forward (generator solve + joint solve + CDE solve),
-        # two cotangent pulls — instead of jax.grad per player re-running
-        # the full SDE solves.
-        def both_losses(gen, disc):
-            p = {"gen": gen, "disc": disc}
-            gl, dl, _ = gan_losses(p, cfg, jax.random.fold_in(k, 1), y_real, batch)
-            return gl, dl
-
-        (gl, dl), vjp = jax.vjp(both_losses, params["gen"], params["disc"])
-        one, zero = jnp.ones_like(gl), jnp.zeros_like(gl)
-        gg, _ = vjp((one, zero))
-        _, dg = vjp((zero, one))
-
-        upd, d_state2 = du(dg, d_state, params["disc"])
-        disc = clip_lipschitz(optim.apply_updates(params["disc"], upd))
-        upd, g_state2 = gu(gg, g_state, params["gen"])
-        gen = optim.apply_updates(params["gen"], upd)
-        return {"gen": gen, "disc": disc}, g_state2, d_state2
+    step_fn = jax.jit(make_sde_gan_step(cfg, gu, du, batch, seq_len,
+                                        constraint=constraint))
 
     start = 0
     if ckpt_dir is not None:
         latest = ckpt.latest_step(ckpt_dir)
         if latest is not None:
-            (params, g_state, d_state), start = ckpt.restore_checkpoint(
-                ckpt_dir, (params, g_state, d_state))
+            try:
+                (params, g_state, d_state), start = ckpt.restore_checkpoint(
+                    ckpt_dir, (params, g_state, d_state))
+            except (KeyError, ValueError) as e:
+                # the optimiser-state pytree depends on --constraint (the
+                # clip chain carries an extra projection slot); a mismatched
+                # checkpoint otherwise dies deep in leaf lookup
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} does not match the current "
+                    f"optimiser-state layout — it was saved under a "
+                    f"different --constraint or an older code version; use "
+                    f"a fresh --ckpt-dir or rerun with matching flags") from e
             print(f"[sde-gan] resumed from step {start}", flush=True)
+
+    mesh = _gan_mesh(batch)
+    if mesh is not None:
+        print(f"[sde-gan] data-parallel over {len(jax.devices())} devices",
+              flush=True)
+    mesh_ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
 
     monitor = StragglerMonitor()
     mmds = []
-    for step in range(start, steps):
-        t0 = time.time()
-        params, g_state, d_state = step_fn(params, g_state, d_state,
-                                           jax.random.fold_in(data_key, step))
-        dt = time.time() - t0
-        if monitor.observe(dt):
-            print(f"[sde-gan] straggler: step {step} took {dt:.2f}s", flush=True)
-        if step % log_every == 0:
-            y_real = ou_process(jax.random.fold_in(key, 777), 256, seq_len)
-            fake = generator_sample(params["gen"], cfg,
-                                    jax.random.fold_in(key, 778), 256)
-            mmd = float(signature_mmd(y_real, fake))
-            mmds.append(mmd)
-            print(f"[sde-gan] step {step:5d} sig-MMD {mmd:.4f} {dt*1e3:.0f}ms",
-                  flush=True)
-        if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
-            ckpt.save_checkpoint(ckpt_dir, step + 1, (params, g_state, d_state))
+    with mesh_ctx:
+        for step in range(start, steps):
+            t0 = time.time()
+            params, g_state, d_state, metrics = step_fn(
+                params, g_state, d_state, jax.random.fold_in(data_key, step))
+            dt = time.time() - t0
+            if monitor.observe(dt):
+                print(f"[sde-gan] straggler: step {step} took {dt:.2f}s",
+                      flush=True)
+            if step % log_every == 0:
+                y_real = ou_process(jax.random.fold_in(key, 777), 256, seq_len)
+                fake = generator_sample(params["gen"], cfg,
+                                        jax.random.fold_in(key, 778), 256)
+                mmd = float(signature_mmd(y_real, fake))
+                mmds.append(mmd)
+                print(f"[sde-gan] step {step:5d} sig-MMD {mmd:.4f} "
+                      f"W {float(metrics['wasserstein']):.4f} {dt*1e3:.0f}ms",
+                      flush=True)
+            if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+                ckpt.save_checkpoint(ckpt_dir, step + 1,
+                                     (params, g_state, d_state))
     if ckpt_dir is not None:
         ckpt.save_checkpoint(ckpt_dir, steps, (params, g_state, d_state))
     return params, mmds
@@ -243,11 +267,37 @@ def main(argv=None):
                          "loop; the GAN's general-noise solves warn and run "
                          "unfused (fusion applies to diagonal-noise solves, "
                          "e.g. Latent SDE)")
+    ap.add_argument("--constraint", choices=("clip", "gp"), default="clip",
+                    help="sde-gan Lipschitz control: 'clip' = the paper's "
+                         "careful clipping, 'gp' = WGAN-GP baseline")
+    ap.add_argument("--sde-steps", type=int, default=31,
+                    help="sde-gan: solver steps per solve")
+    ap.add_argument("--seq-len", type=int, default=32,
+                    help="sde-gan: observed path length")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="simulate N CPU devices (sets "
+                         "--xla_force_host_platform_device_count before the "
+                         "backend initialises; must come before any jax use)")
     args = ap.parse_args(argv)
+    if args.host_devices is not None:
+        import os
+
+        try:  # backend already up ⇒ the flag would be silently ignored
+            initialised = bool(jax._src.xla_bridge._backends)
+        except AttributeError:  # internal layout moved; trust the caller
+            initialised = False
+        if initialised:
+            raise RuntimeError("--host-devices must be processed before jax "
+                               "initialises; set XLA_FLAGS instead")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
     if args.workload == "sde-gan":
         _, mmds = train_sde_gan(args.steps, args.batch, args.ckpt_dir,
                                 args.ckpt_every, args.seed,
-                                solver=args.solver, use_pallas=args.pallas)
+                                solver=args.solver, use_pallas=args.pallas,
+                                num_steps=args.sde_steps, seq_len=args.seq_len,
+                                constraint=args.constraint)
         if mmds:
             print(f"[sde-gan] done: first sig-MMD {mmds[0]:.4f} -> "
                   f"last {mmds[-1]:.4f}")

@@ -8,7 +8,7 @@ the sharding rules in :mod:`repro.distributed.sharding`.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,8 +24,6 @@ hillclimb lever in EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

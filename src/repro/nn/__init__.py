@@ -1,3 +1,11 @@
+from .cde import (  # noqa: F401
+    CDEDiscriminatorSpec,
+    cde_control_field,
+    cde_discriminator_init,
+    cde_drift,
+    cde_initial,
+    cde_readout,
+)
 from .core import (  # noqa: F401
     Embedding,
     gru_cell,

@@ -1,0 +1,102 @@
+"""Lipschitz-constrained Neural-CDE discriminator stack (paper §5 / eq. (2)).
+
+The SDE-GAN discriminator is the Neural CDE
+
+    H_0 = ξ_φ(t_0, Y_0),   dH_t = f_φ(t, H_t) dt + g_φ(t, H_t) d(t, Y_t),
+    F_φ(Y) = m_φ · H_T
+
+driven by the generator's (time-augmented) sample path.  Its recurrent
+structure amplifies any vector-field Lipschitz constant λ > 1 to O(λ^T), so
+the whole stack is built to live inside the Lipschitz-1 constraint set:
+
+* **LipSwish** activations throughout (Lipschitz 1, C² — ReLU is ruled out
+  by the solver's smoothness requirements, paper Appendix D);
+* every Linear is initialised with entries drawn from
+  ``[-1/fan_in, 1/fan_in]`` — the *same* box the careful-clipping projection
+  (:mod:`repro.core.clipping`) enforces after each optimiser update, so the
+  discriminator starts inside the constraint set rather than being slammed
+  onto its boundary by the first clip;
+* the readout ``m`` is deliberately unconstrained (it is applied once at
+  ``t = T``, not recurrently — clipping it would only shrink the score
+  scale, paper §5).
+
+This module owns the parameters and vector fields; solving the CDE against
+a control path is composed one layer up (``repro.core.sde``) so that ``nn``
+stays free of solver dependencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .core import linear, linear_init, lipswish, mlp
+from .core import tcat as _tcat
+
+
+@dataclasses.dataclass(frozen=True)
+class CDEDiscriminatorSpec:
+    """Shapes of the discriminator stack (decoupled from the generator's)."""
+
+    data_dim: int = 1      # y — dimension of the observed/generated path
+    hidden_dim: int = 16   # h — CDE state
+    width: int = 32
+    depth: int = 1
+    dtype: object = jnp.float32
+
+
+def _box_mlp_init(key, sizes, dtype) -> dict:
+    """MLP init *drawn inside* the careful-clipping box: each layer's
+    entries uniform in [-1/fan_in, 1/fan_in] (not a wider law clipped down,
+    which would pile most mass onto the boundary)."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {"layers": [linear_init(k, a, b, scale=1.0 / a, dtype=dtype)
+                       for k, a, b in zip(keys, sizes[:-1], sizes[1:])]}
+
+
+def cde_discriminator_init(key, spec: CDEDiscriminatorSpec) -> dict:
+    """Init the full stack: ``xi`` (initial condition), ``f`` (drift field),
+    ``g`` (control field), ``m`` (readout).  ``xi``/``f``/``g`` start
+    strictly inside the Lipschitz constraint set that training-time careful
+    clipping enforces; ``m`` is unconstrained (see module docstring)."""
+    kx, kf, kg, km = jax.random.split(key, 4)
+    hid = [spec.width] * spec.depth
+    h, y, d = spec.hidden_dim, spec.data_dim, spec.dtype
+    return {
+        "xi": _box_mlp_init(kx, [1 + y] + hid + [h], dtype=d),
+        "f": _box_mlp_init(kf, [1 + h] + hid + [h], dtype=d),
+        "g": _box_mlp_init(kg, [1 + h] + hid + [h * (1 + y)], dtype=d),
+        "m": linear_init(km, h, 1, dtype=d),
+    }
+
+
+def cde_initial(params: dict, t0, y0) -> jax.Array:
+    """H_0 = ξ_φ(t_0, Y_0)."""
+    return mlp(params["xi"], _tcat(t0, y0), lipswish)
+
+
+def cde_drift(spec: CDEDiscriminatorSpec):
+    """f_φ: (t, h) -> dh/dt drift component."""
+
+    def f(params, t, h):
+        return mlp(params["f"], _tcat(t, h), lipswish, jnp.tanh)
+
+    return f
+
+
+def cde_control_field(spec: CDEDiscriminatorSpec):
+    """g_φ: (t, h) -> (h, 1+y) matrix field against the time-augmented
+    control (t, Y_t), so the vector field sees dt through the control too."""
+
+    def g(params, t, h):
+        out = mlp(params["g"], _tcat(t, h), lipswish, jnp.tanh)
+        return out.reshape(h.shape[:-1] + (spec.hidden_dim, 1 + spec.data_dim))
+
+    return g
+
+
+def cde_readout(params: dict, h_final: jax.Array) -> jax.Array:
+    """F_φ = m · H_T, scalar score per batch element."""
+    return linear(params["m"], h_final)[..., 0]

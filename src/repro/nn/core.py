@@ -42,6 +42,16 @@ ACTIVATIONS = {
 }
 
 
+def tcat(t, z):
+    """Concatenate a broadcast time channel onto ``z``: (..., d) -> (..., 1+d).
+
+    The one definition of the time-augmentation convention shared by the
+    generator fields (core/sde.py) and the discriminator fields (nn/cde.py).
+    """
+    tt = jnp.broadcast_to(jnp.asarray(t, z.dtype), z.shape[:-1] + (1,))
+    return jnp.concatenate([tt, z], -1)
+
+
 # -----------------------------------------------------------------------------
 # linear / mlp
 # -----------------------------------------------------------------------------

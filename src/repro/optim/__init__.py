@@ -3,8 +3,10 @@ from .optimizers import (  # noqa: F401
     adam,
     adamw,
     apply_updates,
+    chain,
     clip_by_global_norm,
     cosine_schedule,
+    lipschitz_projection,
     swa_update,
 )
 from .compression import compress_int8, decompress_int8, ef_compress_update  # noqa: F401

@@ -88,6 +88,68 @@ def apply_updates(params, updates):
     return jax.tree.map(jnp.add, params, updates)
 
 
+# -----------------------------------------------------------------------------
+# optax-style composition
+# -----------------------------------------------------------------------------
+#
+# Every optimiser here is an ``(init, update)`` pair with
+# ``update(updates, state, params) -> (updates, state)`` — the optax
+# GradientTransformation protocol minus the NamedTuple wrapper.  ``chain``
+# composes them left-to-right, so real optax transforms interoperate:
+# ``chain(optax.clip(1.0), adadelta(1.0), lipschitz_projection())`` is legal
+# (optax's extra-args update signature matches).
+
+
+def chain(*transforms):
+    """Compose ``(init, update)`` transforms; states are carried as a tuple."""
+    inits, updates = zip(*transforms)
+
+    def init(params):
+        return tuple(i(params) for i in inits)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for u, s in zip(updates, state):
+            grads, s = u(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return init, update
+
+
+def lipschitz_projection(clip_fn=None):
+    """Careful clipping (paper §5) as a pytree transform in the update chain.
+
+    The paper applies the clip to the *parameters after* the optimiser
+    update.  Expressed on updates — so it composes with any optax-style
+    chain — that is ``upd ← clip(params + upd) − params``: applying the
+    returned update lands exactly on the projected parameters, with no
+    second backward pass anywhere (DESIGN.md §4).
+
+    Place it *last* in the chain (it must see the final update).  Stateless.
+    ``clip_fn`` defaults to the structural :func:`repro.core.clipping.clip_pytree`;
+    pass e.g. ``clip_lipschitz`` to restrict to named discriminator MLPs.
+    """
+    from ..core.clipping import clip_pytree
+
+    project = clip_fn if clip_fn is not None else clip_pytree
+
+    def init(params):
+        return ()
+
+    def update(upd, state, params):
+        if params is None:
+            raise ValueError("lipschitz_projection needs params: the clip is "
+                             "a projection of params + update, not of the "
+                             "update alone")
+        stepped = apply_updates(params, upd)
+        clipped = project(stepped)
+        new_upd = jax.tree.map(jnp.subtract, clipped, params)
+        return new_upd, state
+
+    return init, update
+
+
 def clip_by_global_norm(grads, max_norm: float):
     leaves = jax.tree.leaves(grads)
     gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))

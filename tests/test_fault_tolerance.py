@@ -84,7 +84,7 @@ def test_straggler_monitor():
 
 def test_gradient_compression_error_feedback(key):
     """int8 EF compression: the quantisation error is carried, not lost."""
-    from repro.optim.compression import compress_int8, decompress_int8, ef_compress_update
+    from repro.optim.compression import decompress_int8, ef_compress_update
 
     g = {"w": jax.random.normal(key, (256,)) * 0.01}
     err0 = jax.tree.map(jnp.zeros_like, g)

@@ -4,12 +4,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import losses
 from repro.core.clipping import clip_lipschitz, lipschitz_bound_mlp
 from repro.core.sde import (LatentSDEConfig, NeuralSDEConfig, discriminator_init,
-                            discriminate_path, gan_losses, generator_init,
+                            gan_losses, generator_init,
                             generator_sample, latent_sde_init, latent_sde_loss,
                             latent_sde_sample)
 from repro.data.synthetic import air_quality_like, ou_process

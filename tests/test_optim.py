@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
 from hypothesis import given, settings, strategies as st
 
 from repro import optim
-from repro.core.clipping import clip_lipschitz, clip_mlp
+from repro.core.clipping import clip_mlp
 
 
 def test_adam_bias_correction_first_step(key):

@@ -1,7 +1,6 @@
 """Sharding-rule unit tests (1-device safe; full meshes live in dryrun)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
