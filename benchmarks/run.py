@@ -16,7 +16,8 @@ import argparse
 import sys
 import time
 
-from . import brownian, clipping, convergence, gradient_error, report, solver_speed
+from . import (brownian, clipping, convergence, gradient_error, latent_sde,
+               report, solver_speed)
 
 SUITES = {
     "gradient_error": gradient_error.main,   # paper Fig. 2 / Table 6
@@ -24,6 +25,7 @@ SUITES = {
     "brownian": brownian.main,               # paper Table 2 / Tables 7-10
     "clipping": clipping.main,               # paper Tables 3/11 (speed)
     "convergence": convergence.main,         # paper Figs. 5/6 (App. D.4)
+    "latent_sde": latent_sde.main,           # paper Fig. 2 / App. B on the ELBO
 }
 
 

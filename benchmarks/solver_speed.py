@@ -10,8 +10,8 @@ comparisons:
 2. **Fused vs unfused**: the reversible-Heun hot loop with and without the
    Pallas step kernels (``use_pallas_kernels``).  On TPU the fused kernels
    collapse ~6 HBM round-trips per step into one read+write per operand;
-   on CPU they run in interpret mode, so treat the CPU number as a
-   correctness smoke, not a speed claim.
+   off-TPU the fused flag dispatches to the fused jnp oracle (DESIGN.md
+   §5), so the CPU number is a parity check, not a kernel speed claim.
 3. **Batched vs looped**: ``repro.solve_batched`` (one vmapped XLA program
    over a batch of initial states × Brownian seeds) against a Python loop
    of single solves.
@@ -177,7 +177,7 @@ def main(preset: str = "full"):
         print(f"solver_speed_fusion,{k},{v*1e3:.2f}ms,backend={backend}",
               flush=True)
     print(f"solver_speed_fusion,fused_speedup,{ratio:.2f}x"
-          f"{' (interpret mode - correctness only)' if backend != 'tpu' else ''}",
+          f"{' (oracle dispatch - parity, not a kernel speed claim)' if backend != 'tpu' else ''}",
           flush=True)
 
     bl = bench_batched_vs_looped(batch=bl_batch, num_steps=bl_steps, reps=reps)

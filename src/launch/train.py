@@ -5,7 +5,12 @@ Usage::
     PYTHONPATH=src python -m launch.train --workload sde-gan --steps 2
 """
 
-from repro.launch.train import main, train, train_sde_gan  # noqa: F401
+from repro.launch.train import (  # noqa: F401
+    main,
+    train,
+    train_latent_sde,
+    train_sde_gan,
+)
 
 if __name__ == "__main__":
     main()

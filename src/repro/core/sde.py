@@ -45,28 +45,38 @@ class NeuralSDEConfig:
     dtype: object = jnp.float32
 
 
-def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise):
+def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise,
+               gradient_mode=None, solver=None, save_trajectory=True):
     """All SDE-GAN / Latent-SDE solves go through the unified front-end.
+
+    ``gradient_mode``/``solver`` default to the config's derivation (exact
+    reversible adjoint when configured, discretise otherwise); explicit
+    values let the Latent-SDE backsolve baseline request
+    ``"continuous_adjoint"`` without a second dispatch path.
 
     ``use_pallas_kernels`` only applies where the fused kernels are legal:
     diagonal noise under the exact adjoint (see the registry validation in
     repro.core.solve) — e.g. the Latent SDE's posterior solve.  General
     (matrix) noise falls back to the unfused path with a warning.
     """
-    exact = cfg.exact_adjoint and cfg.solver == "reversible_heun"
-    mode = "reversible_adjoint" if exact else "discretise"
+    solver = cfg.solver if solver is None else solver
+    if gradient_mode is None:
+        exact = cfg.exact_adjoint and solver == "reversible_heun"
+        gradient_mode = "reversible_adjoint" if exact else "discretise"
     wants_fuse = getattr(cfg, "use_pallas_kernels", False)
-    fuse = wants_fuse and noise == "diagonal" and exact
+    fuse = (wants_fuse and noise == "diagonal"
+            and gradient_mode == "reversible_adjoint")
     if wants_fuse and not fuse:
         import warnings
 
         warnings.warn(
             f"use_pallas_kernels requested but this solve cannot fuse "
-            f"(noise={noise!r}, exact_adjoint={exact}) — running unfused",
+            f"(noise={noise!r}, gradient_mode={gradient_mode!r}) — running "
+            f"unfused",
             stacklevel=3)
     return solve(drift, diffusion, params, z0, bm, 0.0, cfg.t1, num_steps,
-                 solver=cfg.solver, gradient_mode=mode, noise=noise,
-                 use_pallas_kernels=fuse)
+                 solver=solver, gradient_mode=gradient_mode, noise=noise,
+                 save_trajectory=save_trajectory, use_pallas_kernels=fuse)
 
 
 # =============================================================================
@@ -252,7 +262,35 @@ class LatentSDEConfig:
     solver: str = "reversible_heun"
     exact_adjoint: bool = True
     kl_weight: float = 1.0
+    use_pallas_kernels: bool = False  # fused diagonal-noise hot loop
     dtype: object = jnp.float32
+
+
+def validate_latent_grid(num_steps: int, T: int) -> int:
+    """Check the solver grid aligns with the observation grid; return stride.
+
+    The reconstruction term reads the solver trajectory at the ``T + 1``
+    observation times, so ``num_steps`` must be a positive multiple of ``T``
+    (the number of observation intervals) for every observation to land
+    exactly on a solver step.  Validated eagerly — shapes are static — so
+    callers get a named error instead of an opaque broadcast ``TypeError``
+    (``num_steps=30, T=8``) or ``slice step cannot be zero``
+    (``num_steps < T``) from deep inside the solve.
+    """
+    if T < 1:
+        raise ValueError(
+            f"latent-SDE data must contain at least two observations; got "
+            f"T = {T} observation intervals")
+    if num_steps < T or num_steps % T != 0:
+        reason = (f"num_steps < T" if num_steps < T
+                  else f"num_steps % T == {num_steps % T} != 0")
+        raise ValueError(
+            f"latent-SDE solver grid is misaligned with the observation "
+            f"grid: cfg.num_steps ({num_steps}) must be a positive multiple "
+            f"of the data grid T ({T}, the number of observation intervals "
+            f"= len(y) - 1) so every observation lands on a solver step "
+            f"(valid: {T}, {2 * T}, {3 * T}, ...); got {reason}")
+    return num_steps // T
 
 
 def latent_sde_init(key, cfg: LatentSDEConfig):
@@ -275,45 +313,82 @@ def _lsde_sigma(params, t, x):
     return jax.nn.sigmoid(raw) * 0.5 + 0.05  # bounded positive diagonal
 
 
-def latent_sde_loss(params, cfg: LatentSDEConfig, key, y_true):
-    """Negative ELBO (paper eq. (4) / Appendix B).  ``y_true``: (T+1, B, y).
+def _latent_encode(params, cfg: LatentSDEConfig, key, y_true):
+    """Backward-GRU context + initial-latent sample.
 
-    The KL path integral rides along as an extra state channel so the whole
-    objective is a function of one SDE solve's trajectory.
+    Returns ``(ctx, x0, kl_v)``: the (T+1, B, c) context path ν_φ², the
+    initial hidden state ζ_θ(V̂) with V̂ ~ N(m, s) from ξ_φ(ctx_0), and the
+    per-sample KL(N(m, s) ‖ N(0, 1)) of the initial latent.
     """
-    T = y_true.shape[0] - 1
-    B = y_true.shape[1]
-    dt_data = cfg.t1 / T
-    kz0, kw = jax.random.split(key)
-
     ctx = nn.gru_scan(params["enc"], y_true, reverse=True)  # (T+1, B, c)
-
-    # ---- initial latent: V̂ ~ N(m, s) from ξ_φ(ctx_0)
     ms = nn.mlp(params["qz0"], ctx[0], nn.lipswish)
     m, log_s = jnp.split(ms, 2, -1)
     s = jnp.exp(jnp.clip(log_s, -8, 4))
-    v = m + s * jax.random.normal(kz0, m.shape, cfg.dtype)
-    kl_v = 0.5 * jnp.sum(m**2 + s**2 - 2.0 * jnp.log(s) - 1.0, -1)  # KL(N(m,s)||N(0,1))
+    v = m + s * jax.random.normal(key, m.shape, cfg.dtype)
+    kl_v = 0.5 * jnp.sum(m**2 + s**2 - 2.0 * jnp.log(s) - 1.0, -1)
     x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+    return ctx, x0, kl_v
 
-    aug_params = {"nets": params, "ctx": ctx}
+
+def _latent_posterior_fields(cfg: LatentSDEConfig, T: int, n_aux: int,
+                             with_recon: bool = False):
+    """Posterior drift/diffusion over the augmented state ``[x, kl(, recon)]``.
+
+    The KL path integrand ½‖(μ−ν)/σ‖² always rides as a state channel
+    (paper eq. (4) / Appendix B).  ``with_recon`` adds a second channel
+    integrating the squared reconstruction error against the (step-indexed)
+    observations — the form the terminal-only ELBO needs.  Aux channels
+    carry zero diffusion rows.
+    """
+
+    def _ctx_at(p, t):
+        idx = jnp.clip(jnp.asarray(t / cfg.t1 * T).astype(jnp.int32), 0, T)
+        return jax.lax.dynamic_index_in_dim(p, idx, 0, keepdims=False)
 
     def post_drift(p, t, u):
         x = u[..., : cfg.hidden_dim]
-        nets, ctx_ = p["nets"], p["ctx"]
-        idx = jnp.clip(jnp.asarray(t / cfg.t1 * T).astype(jnp.int32), 0, T)
-        c = jax.lax.dynamic_index_in_dim(ctx_, idx, 0, keepdims=False)
-        nu = nn.mlp(nets["nu"], jnp.concatenate([_tcat(t, x), c], -1), nn.lipswish, jnp.tanh)
+        nets = p["nets"]
+        c = _ctx_at(p["ctx"], t)
+        nu = nn.mlp(nets["nu"], jnp.concatenate([_tcat(t, x), c], -1),
+                    nn.lipswish, jnp.tanh)
         mu = nn.mlp(nets["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
         sig = _lsde_sigma(nets, t, x)
         u_ratio = (mu - nu) / sig
         dkl = 0.5 * jnp.sum(u_ratio * u_ratio, -1, keepdims=True)
-        return jnp.concatenate([nu, dkl], -1)
+        chans = [nu, dkl]
+        if with_recon:
+            y_hat = nn.linear(nets["ell"], x)
+            y_t = _ctx_at(p["y"], t)
+            chans.append(jnp.mean((y_hat - y_t) ** 2, -1, keepdims=True))
+        return jnp.concatenate(chans, -1)
 
     def post_diffusion(p, t, u):
         x = u[..., : cfg.hidden_dim]
         sig = _lsde_sigma(p["nets"], t, x)
-        return jnp.concatenate([sig, jnp.zeros(sig.shape[:-1] + (1,), sig.dtype)], -1)
+        return jnp.concatenate(
+            [sig, jnp.zeros(sig.shape[:-1] + (n_aux,), sig.dtype)], -1)
+
+    return post_drift, post_diffusion
+
+
+def latent_sde_loss(params, cfg: LatentSDEConfig, key, y_true):
+    """Negative ELBO (paper eq. (4) / Appendix B).  ``y_true``: (T+1, B, y).
+
+    The KL path integral rides along as an extra state channel so the whole
+    objective is a function of one SDE solve's trajectory; the
+    reconstruction term reads that trajectory at the observation times,
+    which is why ``cfg.num_steps`` must be a positive multiple of the data
+    grid ``T`` (checked eagerly by :func:`validate_latent_grid`).
+    """
+    T = y_true.shape[0] - 1
+    B = y_true.shape[1]
+    stride = validate_latent_grid(cfg.num_steps, T)
+    dt_data = cfg.t1 / T
+    kz0, kw = jax.random.split(key)
+
+    ctx, x0, kl_v = _latent_encode(params, cfg, kz0, y_true)
+    aug_params = {"nets": params, "ctx": ctx}
+    post_drift, post_diffusion = _latent_posterior_fields(cfg, T, n_aux=1)
 
     u0 = jnp.concatenate([x0, jnp.zeros((B, 1), cfg.dtype)], -1)
     bm = BrownianPath(kw, 0.0, cfg.t1, (B, cfg.hidden_dim + 1), cfg.dtype)
@@ -323,11 +398,51 @@ def latent_sde_loss(params, cfg: LatentSDEConfig, key, y_true):
     xs = traj[..., : cfg.hidden_dim]                       # (N+1, B, x)
     kl_path = traj[-1][..., -1]                            # (B,)
     y_hat = nn.linear(params["ell"], xs)                   # (N+1, B, y)
-    # align solver grid to data grid (num_steps must be a multiple of T)
-    stride = cfg.num_steps // T
-    y_hat_obs = y_hat[::stride]
+    y_hat_obs = y_hat[::stride]                            # (T+1, B, y)
     recon = jnp.sum(jnp.mean((y_hat_obs - y_true) ** 2, axis=(1, 2))) * dt_data
     recon0 = jnp.mean(jnp.sum((y_hat_obs[0] - y_true[0]) ** 2, -1))
+    loss = recon + recon0 + cfg.kl_weight * jnp.mean(kl_path + kl_v)
+    return loss, {"recon": recon, "kl_path": jnp.mean(kl_path), "kl_v": jnp.mean(kl_v)}
+
+
+def latent_sde_loss_terminal(params, cfg: LatentSDEConfig, key, y_true,
+                             gradient_mode=None, solver=None):
+    """Negative ELBO as a function of the *terminal* augmented state only.
+
+    Both the KL path integral and the reconstruction error ride as state
+    channels, so the whole objective is ``f(u_T)`` — the form the
+    continuous-adjoint ("backsolve") baseline requires: eq. (6)
+    backpropagates a terminal-value cotangent only, so it cannot consume a
+    trajectory the way :func:`latent_sde_loss` does.  (The exact reversible
+    adjoint has no such restriction — that asymmetry is the point of the
+    paper; see DESIGN.md §8.)  The recon channel integrates the squared
+    error against the step-indexed observations, so the grid-alignment rule
+    is the same as the trajectory form's.
+
+    ``gradient_mode``/``solver`` override the config's derivation — e.g.
+    ``("continuous_adjoint", "midpoint")`` for the backsolve baseline,
+    ``None`` for the config default (exact adjoint when configured).
+    """
+    T = y_true.shape[0] - 1
+    B = y_true.shape[1]
+    validate_latent_grid(cfg.num_steps, T)
+    kz0, kw = jax.random.split(key)
+
+    ctx, x0, kl_v = _latent_encode(params, cfg, kz0, y_true)
+    aug_params = {"nets": params, "ctx": ctx, "y": y_true}
+    post_drift, post_diffusion = _latent_posterior_fields(
+        cfg, T, n_aux=2, with_recon=True)
+
+    u0 = jnp.concatenate([x0, jnp.zeros((B, 2), cfg.dtype)], -1)
+    bm = BrownianPath(kw, 0.0, cfg.t1, (B, cfg.hidden_dim + 2), cfg.dtype)
+    uT = _cfg_solve(cfg, post_drift, post_diffusion, aug_params, u0, bm,
+                    cfg.num_steps, "diagonal", gradient_mode=gradient_mode,
+                    solver=solver, save_trajectory=False)
+
+    kl_path = uT[..., cfg.hidden_dim]                      # (B,)
+    recon = jnp.mean(uT[..., cfg.hidden_dim + 1])          # ∫‖ŷ−y‖² dt, mean B
+    y_hat0 = nn.linear(params["ell"], x0)
+    recon0 = jnp.mean(jnp.sum((y_hat0 - y_true[0]) ** 2, -1))
     loss = recon + recon0 + cfg.kl_weight * jnp.mean(kl_path + kl_v)
     return loss, {"recon": recon, "kl_path": jnp.mean(kl_path), "kl_v": jnp.mean(kl_v)}
 

@@ -71,10 +71,21 @@ def dw_shape(z_shape, w_dim: Optional[int], noise: str):
     return tuple(z_shape[:-1]) + (w_dim,)
 
 
-def pallas_interpret_default() -> bool:
-    """Interpret-mode default for the fused kernels: real compilation on
-    TPU, the Pallas interpreter everywhere else (CPU CI, tests)."""
-    return jax.default_backend() != "tpu"
+def _pallas_dispatch(interpret: Optional[bool]) -> tuple:
+    """Resolve the fused-step implementation -> ``(run_kernel, interpret)``.
+
+    The kernels/ops.py policy (DESIGN.md §5), applied to the solver hot
+    loop: on TPU the compiled Pallas kernels run natively; on CPU/GPU the
+    fused pure-jnp oracle (:mod:`repro.kernels.ref`) runs instead — same
+    math, and XLA fuses it, so ``use_pallas_kernels=True`` never *slows* a
+    non-TPU backend down the way always-interpret mode did.  Passing
+    ``interpret=True`` explicitly forces the Pallas interpreter off-TPU —
+    that is the kernel-equivalence code path the tests pin.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        return on_tpu, False
+    return True, interpret and not on_tpu
 
 
 class RevHeunState(NamedTuple):
@@ -96,13 +107,22 @@ def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, param
     """
     z, zh, mu, sigma = state
     if use_pallas and noise == "diagonal":
-        from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+        run_kernel, interp = _pallas_dispatch(interpret)
+        if run_kernel:
+            from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
 
-        interp = pallas_interpret_default() if interpret is None else interpret
-        zh1 = rev_heun_phase1(z, zh, mu, sigma, dw, dt=float(dt), interpret=interp)
-        mu1 = drift(params, t + dt, zh1)
-        sigma1 = diffusion(params, t + dt, zh1)
-        z1 = rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt=float(dt), interpret=interp)
+            zh1 = rev_heun_phase1(z, zh, mu, sigma, dw, dt=float(dt), interpret=interp)
+            mu1 = drift(params, t + dt, zh1)
+            sigma1 = diffusion(params, t + dt, zh1)
+            z1 = rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt=float(dt),
+                                 interpret=interp)
+        else:
+            from ..kernels import ref
+
+            zh1 = ref.rev_heun_phase1(z, zh, mu, sigma, dw, float(dt))
+            mu1 = drift(params, t + dt, zh1)
+            sigma1 = diffusion(params, t + dt, zh1)
+            z1 = ref.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, float(dt))
         return RevHeunState(z1, zh1, mu1, sigma1)
     zh1 = 2.0 * z - zh + mu * dt + apply_diffusion(sigma, dw, noise)
     mu1 = drift(params, t + dt, zh1)
@@ -121,15 +141,24 @@ def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusi
     """
     z1, zh1, mu1, sigma1 = state
     if use_pallas and noise == "diagonal":
-        from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+        run_kernel, interp = _pallas_dispatch(interpret)
+        if run_kernel:
+            from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
 
-        interp = pallas_interpret_default() if interpret is None else interpret
-        zh = rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt=float(dt), sign=-1.0,
-                             interpret=interp)
-        mu = drift(params, t1 - dt, zh)
-        sigma = diffusion(params, t1 - dt, zh)
-        z = rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt=float(dt), sign=-1.0,
-                            interpret=interp)
+            zh = rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt=float(dt), sign=-1.0,
+                                 interpret=interp)
+            mu = drift(params, t1 - dt, zh)
+            sigma = diffusion(params, t1 - dt, zh)
+            z = rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt=float(dt), sign=-1.0,
+                                interpret=interp)
+        else:
+            from ..kernels import ref
+
+            zh = ref.rev_heun_phase1(z1, zh1, mu1, sigma1, dw, float(dt), sign=-1.0)
+            mu = drift(params, t1 - dt, zh)
+            sigma = diffusion(params, t1 - dt, zh)
+            z = ref.rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, float(dt),
+                                    sign=-1.0)
         return RevHeunState(z, zh, mu, sigma)
     zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
     mu = drift(params, t1 - dt, zh)

@@ -17,14 +17,18 @@ from ..nn.core import lipswish
 # -----------------------------------------------------------------------------
 
 
-def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float):
-    """ẑ_{n+1} = 2 z_n − ẑ_n + μ_n Δt + σ_n ΔW_n   (Algorithm 1, line 3)."""
-    return 2.0 * z - zh + mu * dt + sigma * dw
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, sign: float = 1.0):
+    """ẑ_{n+1} = 2 z_n − ẑ_n + μ_n Δt + σ_n ΔW_n   (Algorithm 1, line 3).
+
+    ``sign=-1.0`` is the algebraic inverse (Algorithm 2), matching the
+    fused kernel's contract.
+    """
+    return 2.0 * z - zh + mu * (sign * dt) + (sign * sigma) * dw
 
 
-def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float):
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, sign: float = 1.0):
     """z_{n+1} = z_n + ½(μ_n+μ_{n+1})Δt + ½(σ_n+σ_{n+1})ΔW_n."""
-    return z + 0.5 * (mu + mu1) * dt + 0.5 * (sigma + sigma1) * dw
+    return z + (sign * 0.5 * dt) * (mu + mu1) + (sign * 0.5) * (sigma + sigma1) * dw
 
 
 # -----------------------------------------------------------------------------

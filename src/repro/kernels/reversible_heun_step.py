@@ -30,10 +30,11 @@ Kernel contract
   scan.  Traced step sizes must use the unfused path.
 * **Interpret mode**: ``interpret=True`` runs the kernel body under the
   Pallas interpreter — required on CPU, and how CI validates the kernels
-  without a TPU (see tests/test_kernels.py and tests/test_solve.py).
-  Callers that auto-detect should pass ``interpret=(default backend is not
-  TPU)``; :func:`repro.core.solvers.pallas_interpret_default` does exactly
-  this.
+  without a TPU (see tests/test_kernels.py and tests/test_solve.py).  The
+  solver hot loop does NOT pay this off-TPU: ``repro.core.solvers``
+  dispatches per the kernels/ops.py policy (compiled kernel on TPU, the
+  fused jnp oracle in :mod:`repro.kernels.ref` elsewhere) and only forces
+  the interpreter when a caller passes ``interpret=True`` explicitly.
 * **Differentiability**: ``pallas_call`` has no VJP rule — these kernels
   must only appear where AD never traces through them: the custom-VJP
   forward scan and the closed-form backward reconstruction.  The local

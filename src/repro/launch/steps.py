@@ -158,6 +158,113 @@ def make_sde_gan_step(cfg, g_update, d_update, batch: int, seq_len: int,
     return clip_step if constraint == "clip" else gp_step
 
 
+# -----------------------------------------------------------------------------
+# Latent SDE / VAE (Li et al. [15]; paper Appendix B; DESIGN.md §8)
+# -----------------------------------------------------------------------------
+
+
+def make_latent_sde_optimizer(lr: float = 1e-2):
+    """Adam, per the paper's Latent-SDE recipe (Appendix F).  Returns the
+    ``(init, update)`` pair; no projection tail — the VAE has no Lipschitz
+    constraint to maintain (that is the GAN discriminator's problem)."""
+    return optim.adam(lr)
+
+
+def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
+                         adjoint: str = "exact"):
+    """Build the ELBO step: ``(params, opt_state, key) ->
+    (params, opt_state, metrics)``.
+
+    One forward per step via ``jax.vjp`` — encoder GRU + posterior SDE
+    solve, with the KL path integral riding as a state channel — and one
+    cotangent pull through the solver's adjoint:
+
+    * ``adjoint="exact"`` (the paper's recipe): the reversible-Heun exact
+      O(1)-memory adjoint via :func:`repro.core.sde.latent_sde_loss`.  The
+      reconstruction term reads the trajectory at the observation times —
+      only the exact adjoint can backpropagate a whole-trajectory loss with
+      O(1) memory.  This is the workload the fused diagonal-noise Pallas
+      kernels were built for: set ``cfg.use_pallas_kernels=True`` and the
+      posterior solve's forward scan and backward reconstruction run fused.
+    * ``adjoint="backsolve"`` (the Li et al. baseline): the
+      continuous-adjoint eq. (6), which only accepts terminal-value
+      cotangents — so the step switches to
+      :func:`repro.core.sde.latent_sde_loss_terminal`, where the recon
+      integral rides as a second state channel.  Gradients carry the
+      O(√h) truncation error the paper eliminates
+      (``benchmarks/latent_sde.py`` measures it).
+
+    All shape/config mismatches are validated **here, eagerly** — a
+    misaligned solver grid or an illegal solver × adjoint × fusion cell
+    raises a named ``ValueError`` at build time, not a broadcast error from
+    inside jit.
+
+    Batch-parallel: the observation paths are constrained to the
+    time-major layout (``sharding.shard_time_major``) so GSPMD shards the
+    encoder scan and the posterior solve by batch while the (tiny, shared)
+    parameters stay replicated — identical layout to the SDE-GAN step.
+    """
+    from ..core.sde import (latent_sde_loss, latent_sde_loss_terminal,
+                            validate_latent_grid)
+    from ..core.solve import get_solver
+    from ..data.synthetic import air_quality_like
+    from ..distributed.sharding import shard_time_major
+
+    if adjoint not in ("exact", "backsolve"):
+        raise ValueError(
+            f"adjoint must be 'exact' or 'backsolve', got {adjoint!r}")
+    if seq_len < 2:
+        raise ValueError(f"seq_len must be >= 2 observations, got {seq_len}")
+    validate_latent_grid(cfg.num_steps, seq_len - 1)
+    if cfg.data_dim != 2:
+        raise ValueError(
+            f"the latent-SDE workload trains on the bivariate air-quality "
+            f"dataset (PM2.5-like, O₃-like); cfg.data_dim must be 2, got "
+            f"{cfg.data_dim}")
+    if adjoint == "backsolve":
+        spec = get_solver(cfg.solver)
+        if "continuous_adjoint" not in spec.gradient_modes:
+            raise ValueError(
+                f"adjoint='backsolve' needs a solver with a "
+                f"continuous-adjoint backward integrator; {cfg.solver!r} "
+                f"serves {spec.gradient_modes} — use midpoint/heun/"
+                f"euler_maruyama (or adjoint='exact' for reversible_heun)")
+        if cfg.use_pallas_kernels:
+            raise ValueError(
+                "use_pallas_kernels requires the exact reversible-Heun "
+                "adjoint (the fused kernels have no VJP rule and the "
+                "backsolve path is plain AD over eq. (6)); drop --pallas "
+                "or use adjoint='exact'")
+    elif cfg.use_pallas_kernels and not (
+            cfg.solver == "reversible_heun" and cfg.exact_adjoint):
+        raise ValueError(
+            f"use_pallas_kernels requires solver='reversible_heun' with "
+            f"exact_adjoint=True (got solver={cfg.solver!r}, "
+            f"exact_adjoint={cfg.exact_adjoint}) — the fused kernels only "
+            f"apply to the exact-adjoint hot loop")
+
+    def step(params, opt_state, k):
+        ys, _ = air_quality_like(jax.random.fold_in(k, 0), batch, seq_len,
+                                 dtype=cfg.dtype)
+        ys = shard_time_major(ys)
+
+        def elbo(p):
+            if adjoint == "exact":
+                return latent_sde_loss(p, cfg, jax.random.fold_in(k, 1), ys)
+            return latent_sde_loss_terminal(
+                p, cfg, jax.random.fold_in(k, 1), ys,
+                gradient_mode="continuous_adjoint")
+
+        loss, vjp, parts = jax.vjp(elbo, params, has_aux=True)
+        (grads,) = vjp(jnp.ones_like(loss))
+        upd, opt_state = opt_update(grads, opt_state, params)
+        params = optim.apply_updates(params, upd)
+        metrics = {"loss": loss, **parts}
+        return params, opt_state, metrics
+
+    return step
+
+
 def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
     """(params, batch) -> (last-token logits, populated caches)."""
 

@@ -1,12 +1,15 @@
 """Fault-tolerant training driver.
 
-Two workloads behind one driver (``--workload``):
+Three workloads behind one driver (``--workload``):
 
 * ``lm`` (default) — the transformer zoo (repro.models) train loop below;
 * ``sde-gan`` — the paper's Neural SDE-GAN (repro.core.sde), every solve
   dispatched through the unified :func:`repro.solve` front-end
-  (reversible Heun + exact O(1)-memory adjoint, optional Pallas-fused hot
-  loop via ``--pallas``).
+  (reversible Heun + exact O(1)-memory adjoint);
+* ``latent-sde`` — the paper's Latent SDE / VAE (Li et al., Appendix B):
+  one-``jax.vjp`` ELBO steps through the exact adjoint (or the
+  ``--backsolve`` continuous-adjoint baseline), diagonal noise — the
+  workload the Pallas-fused hot loop (``--pallas``) was built for.
 
 Runs for real on whatever devices exist (CPU smoke configs here; the same
 loop pjit-scales to the production mesh).  Demonstrates the full
@@ -136,13 +139,14 @@ def train(arch: str, steps: int, batch: int, seq: int, ckpt_dir: Optional[str],
     return params, losses
 
 
-def _gan_mesh(batch: int):
+def _data_parallel_mesh(batch: int, tag: str):
     """Data-parallel mesh over every visible device (1-device ⇒ no mesh).
 
-    The GAN step is pure batch parallelism (DESIGN.md §4): parameters are
-    tiny and replicated; only the sample batch shards.  Simulate a multi-
-    device host with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    (the ``--host-devices`` flag below does this for you).
+    Both Neural-SDE workloads are pure batch parallelism (DESIGN.md §4/§8):
+    parameters are tiny and replicated; only the sample batch shards.
+    Simulate a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+    ``--host-devices`` flag below does this for you).
     """
     from ..distributed.compat import make_mesh
 
@@ -150,10 +154,71 @@ def _gan_mesh(batch: int):
     if n_dev <= 1:
         return None
     if batch % n_dev != 0:
-        print(f"[sde-gan] batch {batch} not divisible by {n_dev} devices — "
+        print(f"[{tag}] batch {batch} not divisible by {n_dev} devices — "
               f"running unsharded", flush=True)
         return None
     return make_mesh((n_dev,), ("data",))
+
+
+def _restore_or_fresh(ckpt_dir: Optional[str], template, tag: str):
+    """Resume from the newest checkpoint into ``template`` (fresh state,
+    start step 0, when there is none).  A layout mismatch — a checkpoint
+    saved under different flags or an older code version — dies here with
+    a named error instead of deep inside pytree leaf lookup."""
+    if ckpt_dir is None or ckpt.latest_step(ckpt_dir) is None:
+        return template, 0
+    try:
+        state, start = ckpt.restore_checkpoint(ckpt_dir, template)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            f"checkpoint in {ckpt_dir} does not match the current "
+            f"parameter/optimiser-state layout — it was saved under "
+            f"different flags (e.g. --constraint) or an older code version; "
+            f"use a fresh --ckpt-dir or rerun with matching flags") from e
+    print(f"[{tag}] resumed from step {start}", flush=True)
+    return state, start
+
+
+def _sde_training_loop(tag: str, start: int, steps: int, batch: int, state,
+                       step_fn, data_key, ckpt_dir: Optional[str],
+                       ckpt_every: int, on_step):
+    """Shared step-loop scaffold for the Neural-SDE workloads (DESIGN.md
+    §4/§8): data-parallel mesh over visible devices, straggler monitoring,
+    periodic logging, step-granular atomic checkpoints.
+
+    ``step_fn``: ``(state, key) -> (state, metrics)`` with ``state`` the
+    checkpointed pytree.  ``on_step(step, state, metrics, dt)`` handles
+    logging and returns a scalar to record in the returned history (or
+    ``None`` to record nothing for this step).
+    """
+    import contextlib
+
+    from ..distributed.compat import set_mesh
+
+    mesh = _data_parallel_mesh(batch, tag)
+    if mesh is not None:
+        print(f"[{tag}] data-parallel over {len(jax.devices())} devices",
+              flush=True)
+    mesh_ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+
+    monitor = StragglerMonitor()
+    history = []
+    with mesh_ctx:
+        for step in range(start, steps):
+            t0 = time.time()
+            state, metrics = step_fn(state, jax.random.fold_in(data_key, step))
+            dt = time.time() - t0
+            if monitor.observe(dt):
+                print(f"[{tag}] straggler: step {step} took {dt:.2f}s",
+                      flush=True)
+            rec = on_step(step, state, metrics, dt)
+            if rec is not None:
+                history.append(rec)
+            if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+                ckpt.save_checkpoint(ckpt_dir, step + 1, state)
+    if ckpt_dir is not None:
+        ckpt.save_checkpoint(ckpt_dir, steps, state)
+    return state, history
 
 
 def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
@@ -171,13 +236,10 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
     step via ``jax.vjp``, careful clipping as the tail of the discriminator
     optimiser chain, batch sharded over the data-parallel mesh.
     """
-    import contextlib
-
     from ..core.losses import signature_mmd
     from ..core.sde import (NeuralSDEConfig, discriminator_init,
                             generator_init, generator_sample)
     from ..data.synthetic import ou_process
-    from ..distributed.compat import set_mesh
     from .steps import make_gan_optimizers, make_sde_gan_step
 
     cfg = NeuralSDEConfig(
@@ -194,86 +256,140 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
     step_fn = jax.jit(make_sde_gan_step(cfg, gu, du, batch, seq_len,
                                         constraint=constraint))
 
-    start = 0
-    if ckpt_dir is not None:
-        latest = ckpt.latest_step(ckpt_dir)
-        if latest is not None:
-            try:
-                (params, g_state, d_state), start = ckpt.restore_checkpoint(
-                    ckpt_dir, (params, g_state, d_state))
-            except (KeyError, ValueError) as e:
-                # the optimiser-state pytree depends on --constraint (the
-                # clip chain carries an extra projection slot); a mismatched
-                # checkpoint otherwise dies deep in leaf lookup
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} does not match the current "
-                    f"optimiser-state layout — it was saved under a "
-                    f"different --constraint or an older code version; use "
-                    f"a fresh --ckpt-dir or rerun with matching flags") from e
-            print(f"[sde-gan] resumed from step {start}", flush=True)
+    state, start = _restore_or_fresh(ckpt_dir, (params, g_state, d_state),
+                                     "sde-gan")
 
-    mesh = _gan_mesh(batch)
-    if mesh is not None:
-        print(f"[sde-gan] data-parallel over {len(jax.devices())} devices",
+    def gan_step(state, k):
+        params, g_state, d_state = state
+        params, g_state, d_state, metrics = step_fn(params, g_state,
+                                                    d_state, k)
+        return (params, g_state, d_state), metrics
+
+    def on_step(step, state, metrics, dt):
+        if step % log_every != 0:
+            return None
+        y_real = ou_process(jax.random.fold_in(key, 777), 256, seq_len)
+        fake = generator_sample(state[0]["gen"], cfg,
+                                jax.random.fold_in(key, 778), 256)
+        mmd = float(signature_mmd(y_real, fake))
+        print(f"[sde-gan] step {step:5d} sig-MMD {mmd:.4f} "
+              f"W {float(metrics['wasserstein']):.4f} {dt*1e3:.0f}ms",
               flush=True)
-    mesh_ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+        return mmd
 
-    monitor = StragglerMonitor()
-    mmds = []
-    with mesh_ctx:
-        for step in range(start, steps):
-            t0 = time.time()
-            params, g_state, d_state, metrics = step_fn(
-                params, g_state, d_state, jax.random.fold_in(data_key, step))
-            dt = time.time() - t0
-            if monitor.observe(dt):
-                print(f"[sde-gan] straggler: step {step} took {dt:.2f}s",
-                      flush=True)
-            if step % log_every == 0:
-                y_real = ou_process(jax.random.fold_in(key, 777), 256, seq_len)
-                fake = generator_sample(params["gen"], cfg,
-                                        jax.random.fold_in(key, 778), 256)
-                mmd = float(signature_mmd(y_real, fake))
-                mmds.append(mmd)
-                print(f"[sde-gan] step {step:5d} sig-MMD {mmd:.4f} "
-                      f"W {float(metrics['wasserstein']):.4f} {dt*1e3:.0f}ms",
-                      flush=True)
-            if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
-                ckpt.save_checkpoint(ckpt_dir, step + 1,
-                                     (params, g_state, d_state))
-    if ckpt_dir is not None:
-        ckpt.save_checkpoint(ckpt_dir, steps, (params, g_state, d_state))
+    (params, _, _), mmds = _sde_training_loop(
+        "sde-gan", start, steps, batch, state, gan_step, data_key,
+        ckpt_dir, ckpt_every, on_step)
     return params, mmds
+
+
+def train_latent_sde(steps: int, batch: int, ckpt_dir: Optional[str] = None,
+                     ckpt_every: int = 50, seed: int = 0, log_every: int = 10,
+                     solver: str = "reversible_heun", use_pallas: bool = False,
+                     num_steps: int = 23, seq_len: int = 24,
+                     adjoint: str = "exact", kl_weight: float = 0.1,
+                     lr: float = 1e-2):
+    """Latent-SDE (VAE) training (paper Appendix B) at parity with the
+    SDE-GAN path: same data-parallel mesh machinery, checkpointing,
+    straggler monitoring — and the first workload whose training hot loop
+    actually runs the Pallas-fused diagonal-noise kernels (``--pallas``).
+
+    The step comes from :func:`repro.launch.steps.make_latent_sde_step`:
+    one ``jax.vjp`` ELBO forward (encoder GRU + posterior solve with KL as
+    a state channel), one cotangent pull through the reversible-Heun exact
+    adjoint (or the continuous-adjoint "backsolve" baseline).
+    """
+    from ..core.sde import LatentSDEConfig, latent_sde_init
+    from .steps import make_latent_sde_optimizer, make_latent_sde_step
+
+    cfg = LatentSDEConfig(
+        data_dim=2, hidden_dim=16, context_dim=16, width=32,
+        num_steps=num_steps, solver=solver, kl_weight=kl_weight,
+        exact_adjoint=adjoint == "exact" and solver == "reversible_heun",
+        use_pallas_kernels=use_pallas)
+    key = jax.random.PRNGKey(seed)
+    params = latent_sde_init(key, cfg)
+    data_key = jax.random.fold_in(key, 2)
+
+    oi, ou = make_latent_sde_optimizer(lr)
+    opt_state = oi(params)
+    # eager validation (grid alignment, solver × adjoint × fusion) happens
+    # here, before jit — see make_latent_sde_step
+    step_fn = jax.jit(make_latent_sde_step(cfg, ou, batch, seq_len,
+                                           adjoint=adjoint))
+
+    state, start = _restore_or_fresh(ckpt_dir, (params, opt_state),
+                                     "latent-sde")
+
+    def vae_step(state, k):
+        params, opt_state = state
+        params, opt_state, metrics = step_fn(params, opt_state, k)
+        return (params, opt_state), metrics
+
+    def on_step(step, state, metrics, dt):
+        loss = float(metrics["loss"])
+        if step % log_every == 0:
+            print(f"[latent-sde] step {step:5d} -ELBO {loss:.4f} "
+                  f"recon {float(metrics['recon']):.4f} "
+                  f"kl_path {float(metrics['kl_path']):.4f} "
+                  f"{dt*1e3:.0f}ms", flush=True)
+        return loss
+
+    (params, _), losses = _sde_training_loop(
+        "latent-sde", start, steps, batch, state, vae_step, data_key,
+        ckpt_dir, ckpt_every, on_step)
+    return params, losses
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("lm", "sde-gan"), default="lm")
+    ap.add_argument("--workload", choices=("lm", "sde-gan", "latent-sde"),
+                    default="lm")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="lm: shrink the arch to a CPU-runnable smoke "
+                         "config (default).  The sde-gan/latent-sde "
+                         "defaults are already smoke-scale, so the flag is "
+                         "a no-op there")
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at-step", type=int, default=None)
     ap.add_argument("--lose-devices", type=int, default=0)
     ap.add_argument("--solver", default="reversible_heun",
-                    help="sde-gan: any solver registered with repro.solve")
+                    help="sde-gan/latent-sde: any solver registered with "
+                         "repro.solve")
     ap.add_argument("--pallas", action="store_true",
-                    help="sde-gan: request the fused reversible-Heun hot "
-                         "loop; the GAN's general-noise solves warn and run "
-                         "unfused (fusion applies to diagonal-noise solves, "
-                         "e.g. Latent SDE)")
+                    help="request the fused reversible-Heun hot loop.  The "
+                         "latent-sde workload is diagonal-noise, so its "
+                         "posterior solve runs genuinely fused (forward "
+                         "scan + backward reconstruction); the sde-gan "
+                         "workload's general-noise solves warn and run "
+                         "unfused")
     ap.add_argument("--constraint", choices=("clip", "gp"), default="clip",
                     help="sde-gan Lipschitz control: 'clip' = the paper's "
                          "careful clipping, 'gp' = WGAN-GP baseline")
-    ap.add_argument("--sde-steps", type=int, default=31,
-                    help="sde-gan: solver steps per solve")
-    ap.add_argument("--seq-len", type=int, default=32,
-                    help="sde-gan: observed path length")
+    ap.add_argument("--backsolve", action="store_true",
+                    help="latent-sde: use the continuous-adjoint backsolve "
+                         "baseline (Li et al. eq. (6), O(√h) gradient "
+                         "error) instead of the exact reversible adjoint; "
+                         "pairs with --solver midpoint (auto-selected if "
+                         "the solver is left at reversible_heun)")
+    ap.add_argument("--kl-weight", type=float, default=0.1,
+                    help="latent-sde: ELBO KL term weight")
+    ap.add_argument("--lr", type=float, default=1e-2,
+                    help="latent-sde: Adam learning rate")
+    ap.add_argument("--sde-steps", type=int, default=None,
+                    help="solver steps per solve (default: 31 for sde-gan; "
+                         "23 for latent-sde, which must be a positive "
+                         "multiple of seq_len - 1)")
+    ap.add_argument("--seq-len", type=int, default=None,
+                    help="observed path length (default: 32 for sde-gan, "
+                         "24 for latent-sde)")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="simulate N CPU devices (sets "
                          "--xla_force_host_platform_device_count before the "
@@ -293,16 +409,37 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}")
     if args.workload == "sde-gan":
-        _, mmds = train_sde_gan(args.steps, args.batch, args.ckpt_dir,
-                                args.ckpt_every, args.seed,
-                                solver=args.solver, use_pallas=args.pallas,
-                                num_steps=args.sde_steps, seq_len=args.seq_len,
-                                constraint=args.constraint)
+        _, mmds = train_sde_gan(
+            args.steps, args.batch, args.ckpt_dir, args.ckpt_every, args.seed,
+            solver=args.solver, use_pallas=args.pallas,
+            num_steps=31 if args.sde_steps is None else args.sde_steps,
+            seq_len=32 if args.seq_len is None else args.seq_len,
+            constraint=args.constraint)
         if mmds:
             print(f"[sde-gan] done: first sig-MMD {mmds[0]:.4f} -> "
                   f"last {mmds[-1]:.4f}")
         else:  # e.g. resumed a finished run: no steps executed
             print("[sde-gan] done: no steps run")
+        return
+    if args.workload == "latent-sde":
+        solver = args.solver
+        if args.backsolve and solver == "reversible_heun":
+            solver = "midpoint"  # the backsolve baseline's solver (paper's)
+            print("[latent-sde] --backsolve: using midpoint (reversible_heun "
+                  "has no continuous-adjoint backward)", flush=True)
+        seq_len = 24 if args.seq_len is None else args.seq_len
+        num_steps = seq_len - 1 if args.sde_steps is None else args.sde_steps
+        _, losses = train_latent_sde(
+            args.steps, args.batch, args.ckpt_dir, args.ckpt_every, args.seed,
+            solver=solver, use_pallas=args.pallas,
+            num_steps=num_steps, seq_len=seq_len,
+            adjoint="backsolve" if args.backsolve else "exact",
+            kl_weight=args.kl_weight, lr=args.lr)
+        if losses:
+            print(f"[latent-sde] done: first -ELBO {losses[0]:.4f} -> "
+                  f"last {losses[-1]:.4f}")
+        else:
+            print("[latent-sde] done: no steps run")
         return
     _, losses = train(args.arch, args.steps, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.smoke, args.seed,

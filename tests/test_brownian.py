@@ -167,6 +167,38 @@ def test_path_fwd_bwd_same_noise(seed):
         np.testing.assert_array_equal(a, b)
 
 
+@given(st.floats(0.02, 0.98), st.floats(0.02, 0.98), st.floats(0.0, 1.0),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_path_evaluate_additive_over_adjacent_intervals(a, b, frac, seed):
+    """System invariant: ``evaluate`` is additive over adjacent intervals —
+    W(s,u) == W(s,t) + W(t,u) for ANY interior split point t, because every
+    query is the difference of deterministic W(·) samples.  Property-based
+    over (interval, split, seed)."""
+    s, u = min(a, b), max(a, b)
+    if u - s < 1e-3:
+        u = s + 1e-3
+    t = s + frac * (u - s)
+    bm = BrownianPath(jax.random.PRNGKey(seed), 0.0, 1.0, (3,))
+    w_su = np.asarray(bm.evaluate(s, u))
+    w_st = np.asarray(bm.evaluate(s, t))
+    w_tu = np.asarray(bm.evaluate(t, u))
+    np.testing.assert_allclose(w_st + w_tu, w_su, atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_vbtree_grid_increments_sum_to_full_interval(seed, n):
+    """System invariant: VirtualBrownianTree increments over an ``n``-step
+    grid telescope to ``evaluate(t0, t1)`` — each increment is a difference
+    of deterministic W(·) samples, so the interior points cancel exactly."""
+    vb = VirtualBrownianTree(jax.random.PRNGKey(seed), 0.0, 1.0, (3,),
+                             tol=1e-4)
+    total = sum(np.asarray(vb.increment(jnp.int32(i), n)) for i in range(n))
+    full = np.asarray(vb.evaluate(0.0, 1.0))
+    np.testing.assert_allclose(total, full, atol=1e-5, rtol=1e-5)
+
+
 def test_dense_path_pathwise_consistent_refinement(key):
     """DenseBrownianPath: coarse increments are sums of fine ones — the
     property strong-convergence measurement needs."""

@@ -303,3 +303,40 @@ def test_pallas_fused_under_jit_and_vmap(key):
                         gradient_mode="reversible_adjoint")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-6, atol=1e-6)
+
+
+def test_fused_step_dispatch_interpret_matches_oracle(key):
+    """The fused-step dispatcher (DESIGN.md §5): off-TPU the auto path runs
+    the fused jnp oracle, and ``interpret=True`` forces the Pallas
+    interpreter — both must agree with the plain unfused stepper, for the
+    forward step AND the sign=-1 reverse reconstruction."""
+    from repro.core.solvers import (RevHeunState, reversible_heun_reverse_step,
+                                    reversible_heun_step)
+
+    k1, k2 = jax.random.split(key)
+    drift = lambda p, t, z: -p * z
+    diffusion = lambda p, t, z: 0.3 * jnp.ones_like(z)
+    p = jnp.float32(0.7)
+    z = jax.random.normal(k1, (4, 8))
+    state = RevHeunState(z, z, drift(p, 0.0, z), diffusion(p, 0.0, z))
+    dw = 0.1 * jax.random.normal(k2, (4, 8))
+
+    variants = {}
+    for name, kw in (("unfused", dict(use_pallas=False)),
+                     ("oracle", dict(use_pallas=True)),          # auto: off-TPU
+                     ("interpret", dict(use_pallas=True, interpret=True))):
+        fwd = reversible_heun_step(state, 0.0, 0.125, dw, drift, diffusion,
+                                   p, "diagonal", **kw)
+        rev = reversible_heun_reverse_step(fwd, 0.125, 0.125, dw, drift,
+                                           diffusion, p, "diagonal", **kw)
+        variants[name] = (fwd, rev)
+    for name in ("oracle", "interpret"):
+        for got, want in zip(jax.tree.leaves(variants[name]),
+                             jax.tree.leaves(variants["unfused"])):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+    # the reverse step must reconstruct the pre-step state (Algorithm 2)
+    for got, want in zip(jax.tree.leaves(variants["oracle"][1]),
+                         jax.tree.leaves(tuple(state))):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
