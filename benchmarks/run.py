@@ -17,7 +17,7 @@ import sys
 import time
 
 from . import (brownian, clipping, convergence, gradient_error, latent_sde,
-               report, solver_speed)
+               report, serving, solver_speed)
 
 SUITES = {
     "gradient_error": gradient_error.main,   # paper Fig. 2 / Table 6
@@ -26,6 +26,7 @@ SUITES = {
     "clipping": clipping.main,               # paper Tables 3/11 (speed)
     "convergence": convergence.main,         # paper Figs. 5/6 (App. D.4)
     "latent_sde": latent_sde.main,           # paper Fig. 2 / App. B on the ELBO
+    "serving": serving.main,                 # trajectory-sampling throughput
 }
 
 

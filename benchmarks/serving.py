@@ -1,0 +1,150 @@
+"""Serving benchmark suite: batched trajectory-sampling throughput.
+
+Two axes (DESIGN.md §9; the serving architecture under test is
+``repro.launch.steps.make_sample_step`` — the exact program
+launch/serve.py AOT-compiles per bucket):
+
+1. **Throughput vs batch size** (SDE-GAN generator rollout): best-of-reps
+   wall clock and trajectories/sec per bucket size.  Larger buckets must
+   amortise per-dispatch overhead — the whole point of request coalescing —
+   so the gate asserts trajectories/sec is strictly higher at the largest
+   bucket than at batch 1.
+
+2. **Fused vs unfused latent prior decode** — the diagonal-noise sampler
+   with and without ``use_pallas_kernels``.  As in benchmarks/latent_sde.py,
+   wall-clock rows are reported for existence and the **gated** comparison
+   is the XLA cost-model bytes-accessed ratio (deterministic where shared
+   CI runners are not): fusion never *adds* traffic, so the ratio is ≥ 1
+   by construction (exactly 1.0 off-TPU, where the fused path dispatches
+   to the identical jnp oracle — DESIGN.md §5).
+
+The ``*_ms`` rows feed CI's bench-regression gate
+(``benchmarks/report.py --compare``): a >2× best-of-reps wall-clock
+regression against the committed BENCH_serving.json fails bench-smoke.
+
+Run:  PYTHONPATH=src python benchmarks/serving.py --preset tiny
+Emits BENCH_serving.json (schema in benchmarks/report.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+try:
+    from . import report
+    from .latent_sde import _bytes_accessed
+except ImportError:  # run as a loose script: python benchmarks/serving.py
+    import report
+    from latent_sde import _bytes_accessed
+
+# num_steps: solver horizon; batches: bucket sizes (throughput axis);
+# fused_batch: bucket for the fused-vs-unfused comparison; reps: timing reps
+PRESET_SHAPES = {
+    "tiny":  dict(num_steps=16, batches=(1, 4, 16), fused_batch=16,
+                  hidden=8, width=16, reps=5),
+    "quick": dict(num_steps=32, batches=(1, 8, 32, 128), fused_batch=64,
+                  hidden=16, width=32, reps=8),
+    "full":  dict(num_steps=64, batches=(1, 16, 128, 1024), fused_batch=256,
+                  hidden=16, width=32, reps=15),
+}
+
+
+def _best_of(reps: int, compiled, *args) -> float:
+    jax.block_until_ready(compiled(*args))  # warm (AOT: compile already done)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_throughput(num_steps: int, batches, hidden: int, width: int,
+                     reps: int):
+    """trajectories/sec per bucket size for the SDE-GAN sampler."""
+    from repro.core.sde import NeuralSDEConfig, generator_init
+    from repro.launch.steps import make_sample_step
+
+    cfg = NeuralSDEConfig(data_dim=1, hidden_dim=hidden, noise_dim=4,
+                          width=width, num_steps=num_steps)
+    key = jax.random.PRNGKey(0)
+    params = generator_init(key, cfg)
+    jitted = jax.jit(make_sample_step("sde-gan", cfg))
+
+    rows, tps = [], {}
+    for b in batches:
+        keys = jax.random.split(jax.random.fold_in(key, b), b)
+        compiled = jitted.lower(params, keys).compile()
+        best = _best_of(reps, compiled, params, keys)
+        tps[b] = b / best
+        rows.append(("serving", f"sde_gan_batch{b}_ms", best * 1e3))
+        rows.append(("serving", f"sde_gan_traj_per_s,batch={b}", tps[b]))
+        print(f"serving,sde_gan,batch={b},{best*1e3:.2f}ms,"
+              f"{tps[b]:.1f}traj/s", flush=True)
+    big, small = max(batches), min(batches)
+    # coalescing must pay: the big bucket amortises dispatch overhead
+    assert tps[big] > tps[small], (
+        f"batching did not improve throughput: batch={big} served "
+        f"{tps[big]:.1f} traj/s vs {tps[small]:.1f} at batch={small}")
+    return rows
+
+
+def bench_fused_prior(num_steps: int, fused_batch: int, hidden: int,
+                      width: int, reps: int):
+    """Fused vs unfused latent prior decode: interleaved best-of-reps wall
+    clock + the deterministic cost-model bytes gate."""
+    from repro.core.sde import LatentSDEConfig, latent_sde_init
+    from repro.launch.steps import make_sample_step
+
+    key = jax.random.PRNGKey(1)
+    keys = jax.random.split(key, fused_batch)
+    built = {}
+    for fused in (False, True):
+        cfg = LatentSDEConfig(data_dim=2, hidden_dim=hidden,
+                              context_dim=hidden, width=width,
+                              num_steps=num_steps, use_pallas_kernels=fused)
+        params = latent_sde_init(key, cfg)
+        jitted = jax.jit(make_sample_step("latent-sde", cfg))
+        built[fused] = (jitted.lower(params, keys).compile(), jitted, params)
+        jax.block_until_ready(built[fused][0](params, keys))  # warm
+
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(reps):  # interleave: same machine conditions for both
+        for fused, (compiled, _, params) in built.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(params, keys))
+            best[fused] = min(best[fused], time.perf_counter() - t0)
+    bytes_ = {fused: _bytes_accessed(jitted, params, keys)
+              for fused, (_, jitted, params) in built.items()}
+
+    rows = []
+    for fused in (False, True):
+        label = "fused" if fused else "unfused"
+        rows.append(("serving", f"latent_prior_{label}_ms", best[fused] * 1e3))
+        rows.append(("serving", f"latent_prior_{label}_bytes_accessed",
+                     bytes_[fused]))
+        print(f"serving,latent_prior_{label},{best[fused]*1e3:.2f}ms,"
+              f"bytes={bytes_[fused]:.3e}", flush=True)
+    speedup = bytes_[False] / bytes_[True]
+    rows.append(("serving", "latent_prior_fused_speedup", speedup))
+    print(f"serving,latent_prior_fused_speedup,{speedup:.3f}x "
+          f"(cost-model bytes)", flush=True)
+    assert speedup >= 1.0 - 1e-9, (
+        f"fused prior decode accessed MORE bytes than unfused "
+        f"({bytes_[True]:.3e} vs {bytes_[False]:.3e})")
+    return rows
+
+
+def main(preset: str = "full"):
+    shape = PRESET_SHAPES[preset]
+    rows = bench_throughput(shape["num_steps"], shape["batches"],
+                            shape["hidden"], shape["width"], shape["reps"])
+    rows += bench_fused_prior(shape["num_steps"], shape["fused_batch"],
+                              shape["hidden"], shape["width"], shape["reps"])
+    return rows
+
+
+if __name__ == "__main__":
+    report.standalone("serving", main)

@@ -1,5 +1,10 @@
 from .store import (  # noqa: F401
+    SERVING_SCHEMA,
+    config_to_meta,
     latest_step,
+    load_serving_meta,
     restore_checkpoint,
+    restore_serving_bundle,
     save_checkpoint,
+    save_serving_bundle,
 )

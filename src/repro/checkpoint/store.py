@@ -11,10 +11,18 @@ manifest and the directory is ignored (and garbage-collected on the next
 save).  ``restore_checkpoint`` finds the newest valid step — the auto-resume
 path of launch/train.py.  Leaves are addressed by their pytree key-path so a
 restore is robust to dict-ordering changes.
+
+**Serving bundles** (DESIGN.md §9): training additionally persists a
+params-only checkpoint under ``<dir>/serving/`` whose manifest carries the
+``repro-serving/v1`` handshake — workload name + the model config needed to
+rebuild the parameter template.  launch/serve.py restores *only* from a
+bundle, so a training checkpoint saved under different flags or an older
+code version dies with a named error instead of a silent shape mismatch.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import shutil
 from pathlib import Path
@@ -22,6 +30,9 @@ from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+SERVING_SCHEMA = "repro-serving/v1"
+_SERVING_SUBDIR = "serving"
 
 
 def _leaf_names(tree) -> Tuple[list, Any]:
@@ -32,8 +43,11 @@ def _leaf_names(tree) -> Tuple[list, Any]:
 
 
 def save_checkpoint(ckpt_dir, step: int, tree, host_id: int = 0,
-                    keep: int = 3) -> Path:
-    """Atomically persist ``tree`` at ``step``; prunes to ``keep`` newest."""
+                    keep: int = 3, meta: Optional[dict] = None) -> Path:
+    """Atomically persist ``tree`` at ``step``; prunes to ``keep`` newest.
+
+    ``meta``: optional JSON-safe dict stored in the manifest (the serving
+    handshake rides here)."""
     ckpt_dir = Path(ckpt_dir)
     step_dir = ckpt_dir / f"step_{step:012d}"
     tmp_dir = ckpt_dir / f".tmp_step_{step:012d}"
@@ -50,6 +64,8 @@ def save_checkpoint(ckpt_dir, step: int, tree, host_id: int = 0,
         "leaves": {n: {"shape": list(a.shape), "dtype": str(a.dtype)}
                    for n, a in arrays.items()},
     }
+    if meta is not None:
+        manifest["meta"] = meta
     (tmp_dir / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
     if step_dir.exists():
         shutil.rmtree(step_dir)
@@ -99,3 +115,68 @@ def restore_checkpoint(ckpt_dir, like_tree, step: Optional[int] = None,
             raise ValueError(f"checkpoint leaf {n}: shape {arr.shape} != {like.shape}")
         restored.append(jax.numpy.asarray(arr, dtype=like.dtype))
     return jax.tree_util.tree_unflatten(treedef, restored), manifest["step"]
+
+
+# -----------------------------------------------------------------------------
+# serving bundles (the train -> serve checkpoint handshake; DESIGN.md §9)
+# -----------------------------------------------------------------------------
+
+
+def _json_safe(v):
+    """JSON-encode dataclass config values; dtype-likes become their name."""
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        return np.dtype(v).name  # jnp.float32 & friends
+
+
+def config_to_meta(cfg) -> dict:
+    """Dataclass model config -> the JSON-safe dict stored in the bundle."""
+    d = dataclasses.asdict(cfg) if dataclasses.is_dataclass(cfg) else dict(cfg)
+    return {k: _json_safe(v) for k, v in d.items()}
+
+
+def save_serving_bundle(ckpt_dir, step: int, params, workload: str,
+                        cfg) -> Path:
+    """Persist a params-only serving checkpoint under ``<ckpt_dir>/serving``.
+
+    The manifest carries the handshake: schema tag, workload name, and the
+    model config (so launch/serve.py can rebuild the parameter template and
+    the sampler without the training flags)."""
+    meta = {"schema": SERVING_SCHEMA, "workload": workload,
+            "config": config_to_meta(cfg)}
+    return save_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, step, params,
+                           meta=meta)
+
+
+def load_serving_meta(ckpt_dir) -> Tuple[dict, int]:
+    """Read the newest serving bundle's handshake -> ``(meta, step)``.
+
+    Named errors for every way the handshake can be absent or stale —
+    launch/serve.py surfaces these verbatim instead of a pytree-leaf
+    mismatch deep inside restore."""
+    sdir = Path(ckpt_dir) / _SERVING_SUBDIR
+    step = latest_step(sdir)
+    if step is None:
+        raise FileNotFoundError(
+            f"no serving bundle under {ckpt_dir} — launch/train.py writes "
+            f"<ckpt-dir>/{_SERVING_SUBDIR}/ alongside training checkpoints "
+            f"(this checkpoint predates the serving subsystem, or the path "
+            f"is wrong); re-run training, or use launch/serve.py --smoke "
+            f"for a fresh-init service")
+    manifest = json.loads(
+        (sdir / f"step_{step:012d}" / "MANIFEST.json").read_text())
+    meta = manifest.get("meta") or {}
+    if meta.get("schema") != SERVING_SCHEMA:
+        raise ValueError(
+            f"serving bundle under {ckpt_dir} has schema "
+            f"{meta.get('schema')!r}, expected {SERVING_SCHEMA!r} — written "
+            f"by an incompatible code version; re-run training")
+    return meta, step
+
+
+def restore_serving_bundle(ckpt_dir, like_tree, step: Optional[int] = None):
+    """Restore the params-only serving tree into ``like_tree``'s structure."""
+    return restore_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, like_tree,
+                              step=step)

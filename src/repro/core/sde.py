@@ -330,6 +330,18 @@ def _latent_encode(params, cfg: LatentSDEConfig, key, y_true):
     return ctx, x0, kl_v
 
 
+def _step_index_lookup(t1: float, T: int):
+    """``(path, t) -> path[round(t / t1 * T)]`` — index a (T+1, ...) tensor
+    (encoder context, observations) by solver time.  Shared by the training
+    posterior fields and the serving posterior decode."""
+
+    def at(p, t):
+        idx = jnp.clip(jnp.asarray(t / t1 * T).astype(jnp.int32), 0, T)
+        return jax.lax.dynamic_index_in_dim(p, idx, 0, keepdims=False)
+
+    return at
+
+
 def _latent_posterior_fields(cfg: LatentSDEConfig, T: int, n_aux: int,
                              with_recon: bool = False):
     """Posterior drift/diffusion over the augmented state ``[x, kl(, recon)]``.
@@ -341,9 +353,7 @@ def _latent_posterior_fields(cfg: LatentSDEConfig, T: int, n_aux: int,
     carry zero diffusion rows.
     """
 
-    def _ctx_at(p, t):
-        idx = jnp.clip(jnp.asarray(t / cfg.t1 * T).astype(jnp.int32), 0, T)
-        return jax.lax.dynamic_index_in_dim(p, idx, 0, keepdims=False)
+    _ctx_at = _step_index_lookup(cfg.t1, T)
 
     def post_drift(p, t, u):
         x = u[..., : cfg.hidden_dim]
@@ -447,19 +457,150 @@ def latent_sde_loss_terminal(params, cfg: LatentSDEConfig, key, y_true,
     return loss, {"recon": recon, "kl_path": jnp.mean(kl_path), "kl_v": jnp.mean(kl_v)}
 
 
+def latent_prior_drift(p, t, x):
+    """Prior drift μ_θ — shared by training-time prior sampling and serving."""
+    return nn.mlp(p["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
+
+
+def latent_prior_diffusion(p, t, x):
+    """Diagonal prior diffusion (bounded positive, shared with the posterior)."""
+    return _lsde_sigma(p, t, x)
+
+
 def latent_sde_sample(params, cfg: LatentSDEConfig, key, batch: int):
     """Sample from the prior: returns (num_steps+1, batch, y)."""
     kv, kw = jax.random.split(key)
     v = jax.random.normal(kv, (batch, cfg.initial_noise_dim), cfg.dtype)
     x0 = nn.mlp(params["zeta"], v, nn.lipswish)
 
-    def drift(p, t, x):
-        return nn.mlp(p["mu"], _tcat(t, x), nn.lipswish, jnp.tanh)
-
-    def diffusion(p, t, x):
-        return _lsde_sigma(p, t, x)
-
     bm = BrownianPath(kw, 0.0, cfg.t1, (batch, cfg.hidden_dim), cfg.dtype)
-    traj = solve(drift, diffusion, params, x0, bm, 0.0, cfg.t1, cfg.num_steps,
+    traj = solve(latent_prior_drift, latent_prior_diffusion, params, x0, bm,
+                 0.0, cfg.t1, cfg.num_steps,
                  solver=cfg.solver, gradient_mode="discretise", noise="diagonal")
     return nn.linear(params["ell"], traj)
+
+
+# =============================================================================
+# Inference-only sampling entry points (serving; DESIGN.md §9)
+# =============================================================================
+#
+# No loss plumbing: these produce trajectories, nothing else.  The serving
+# contract is that **every trajectory row is a pure function of its own PRNG
+# key** (plus params), so the bucket-padding in launch/serve.py — padding an
+# off-size request batch up to the nearest compiled bucket — can never
+# perturb the rows a client actually asked for.  All solves dispatch through
+# :func:`_cfg_solve`, i.e. the unified ``repro.solve`` front-end: any
+# registered solver × noise type is servable.
+
+
+def generator_sample_paths(params, cfg: NeuralSDEConfig, keys):
+    """SDE-GAN generator rollout for serving, one trajectory per key.
+
+    ``keys``: (B,) PRNG keys.  Returns (num_steps+1, B, data_dim),
+    time-major like every path tensor in the repo.
+    """
+
+    def one(k):
+        kv, kw = jax.random.split(k)
+        v = jax.random.normal(kv, (cfg.initial_noise_dim,), cfg.dtype)
+        x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+        bm = BrownianPath(kw, 0.0, cfg.t1, (cfg.noise_dim,), cfg.dtype)
+        traj = _cfg_solve(cfg, gen_drift(cfg), gen_diffusion(cfg), params,
+                          x0, bm, cfg.num_steps, "general")
+        return nn.linear(params["ell"], traj)
+
+    return jax.vmap(one, out_axes=1)(keys)
+
+
+def generator_initial_state(params, cfg: NeuralSDEConfig, keys):
+    """x₀ = ζ_θ(V) per key — the entry state for the streamed (time-chunked)
+    rollout in launch/serve.py.  Returns (B, hidden_dim)."""
+
+    def one(k):
+        kv, _ = jax.random.split(k)
+        v = jax.random.normal(kv, (cfg.initial_noise_dim,), cfg.dtype)
+        return nn.mlp(params["zeta"], v, nn.lipswish)
+
+    return jax.vmap(one)(keys)
+
+
+def generator_rollout_chunk(params, cfg: NeuralSDEConfig, keys, x0, t_start,
+                            span: float, num_steps: int):
+    """Continue generator trajectories over one time chunk
+    ``[t_start, t_start + span]`` of a streamed horizon.
+
+    ``t_start`` may be a *traced* scalar: the drift/diffusion consume it
+    arithmetically only, so one compiled program serves every chunk of the
+    stream (launch/serve.py compiles per bucket, not per chunk).  ``keys``
+    must be pre-folded per chunk by the caller — the Brownian sample is
+    keyed per (row, chunk), keeping the stream deterministic and rows
+    independent.  Runs ``gradient_mode="discretise"`` (plain scan): serving
+    takes no gradients, and the traced ``t_start`` rules out the fused
+    path's static-``dt`` contract.
+
+    Returns ``(ys, xT)``: ys (num_steps+1, B, data_dim) with row 0 the
+    chunk-entry state (== previous chunk's final row, for continuity
+    checks), and xT (B, hidden_dim) to carry into the next chunk.
+    """
+
+    def one(k, x0_i):
+        bm = BrownianPath(k, 0.0, span, (cfg.noise_dim,), cfg.dtype)
+        traj = solve(gen_drift(cfg), gen_diffusion(cfg), params, x0_i, bm,
+                     t_start, t_start + span, num_steps,
+                     solver=cfg.solver, gradient_mode="discretise",
+                     noise="general")
+        return nn.linear(params["ell"], traj), traj[-1]
+
+    return jax.vmap(one, in_axes=(0, 0), out_axes=(1, 0))(keys, x0)
+
+
+def latent_sde_sample_paths(params, cfg: LatentSDEConfig, keys):
+    """Latent-SDE prior decode for serving, one trajectory per key.
+
+    Diagonal noise, so with ``cfg.use_pallas_kernels`` the solve runs the
+    fused reversible-Heun forward scan.  Returns (num_steps+1, B, data_dim).
+    """
+
+    def one(k):
+        kv, kw = jax.random.split(k)
+        v = jax.random.normal(kv, (cfg.initial_noise_dim,), cfg.dtype)
+        x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+        bm = BrownianPath(kw, 0.0, cfg.t1, (cfg.hidden_dim,), cfg.dtype)
+        traj = _cfg_solve(cfg, latent_prior_drift, latent_prior_diffusion,
+                          params, x0, bm, cfg.num_steps, "diagonal")
+        return nn.linear(params["ell"], traj)
+
+    return jax.vmap(one, out_axes=1)(keys)
+
+
+def latent_sde_posterior_decode(params, cfg: LatentSDEConfig, keys, y_obs):
+    """Latent-SDE posterior decode for serving: encode observed paths, solve
+    the posterior SDE (no KL/recon channels), return ŷ on the solver grid.
+
+    ``keys``: (B,); ``y_obs``: (T+1, B, data_dim) observations.  Row ``i``
+    depends only on ``(params, keys[i], y_obs[:, i])`` — the same
+    bucket-padding invariant as the other serving entry points.  Returns
+    (num_steps+1, B, data_dim).
+    """
+    T = y_obs.shape[0] - 1
+    validate_latent_grid(cfg.num_steps, T)
+    ctx_at = _step_index_lookup(cfg.t1, T)
+
+    def drift(p, t, x):
+        c = ctx_at(p["ctx"], t)
+        return nn.mlp(p["nets"]["nu"],
+                      jnp.concatenate([_tcat(t, x), c], -1),
+                      nn.lipswish, jnp.tanh)
+
+    def diffusion(p, t, x):
+        return _lsde_sigma(p["nets"], t, x)
+
+    def one(k, y):  # y: (T+1, data_dim)
+        ctx, x0, _ = _latent_encode(params, cfg, jax.random.fold_in(k, 0), y)
+        bm = BrownianPath(jax.random.fold_in(k, 1), 0.0, cfg.t1,
+                          (cfg.hidden_dim,), cfg.dtype)
+        traj = _cfg_solve(cfg, drift, diffusion, {"nets": params, "ctx": ctx},
+                          x0, bm, cfg.num_steps, "diagonal")
+        return nn.linear(params["ell"], traj)
+
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(keys, y_obs)

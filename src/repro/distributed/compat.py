@@ -84,6 +84,27 @@ def set_mesh(mesh):
             yield mesh
 
 
+def force_host_device_count(n: int) -> None:
+    """Simulate ``n`` CPU devices (the ``--host-devices`` flag of
+    launch/train.py and launch/serve.py) by appending
+    ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``.
+
+    Must run before the XLA backend initialises — once it is up the flag
+    would be silently ignored, so this raises instead."""
+    import os
+
+    try:  # backend already up ⇒ the flag would be silently ignored
+        initialised = bool(jax._src.xla_bridge._backends)
+    except AttributeError:  # internal layout moved; trust the caller
+        initialised = False
+    if initialised:
+        raise RuntimeError("--host-devices must be processed before jax "
+                           "initialises; set XLA_FLAGS instead")
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}")
+
+
 def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     """Construct ``jax.sharding.AbstractMesh`` on either constructor API."""
     shapes = tuple(axis_shapes)

@@ -93,6 +93,26 @@ def shard_time_major(x: jax.Array) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, time_major_pspec())
 
 
+def data_parallel_mesh(batch: Optional[int] = None):
+    """Pure data-parallel mesh over every visible device, or ``None`` when
+    there is a single device (or ``batch`` is given and not divisible — a
+    constraint GSPMD in_shardings cannot satisfy).
+
+    Both Neural-SDE training steps and the serving sampler are pure batch
+    parallelism (DESIGN.md §4/§8/§9): parameters are tiny and replicated,
+    only the sample batch shards.  Callers activate the mesh with
+    ``distributed.compat.set_mesh``.
+    """
+    from .compat import make_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev <= 1:
+        return None
+    if batch is not None and batch % n_dev != 0:
+        return None
+    return make_mesh((n_dev,), ("data",))
+
+
 # -----------------------------------------------------------------------------
 # parameter sharding rules (by name, innermost path component)
 # -----------------------------------------------------------------------------

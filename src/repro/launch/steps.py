@@ -12,7 +12,10 @@ import jax.numpy as jnp
 
 from .. import optim
 from ..configs.base import ArchConfig
-from ..models import transformer as T
+
+# NOTE: the transformer zoo (repro.models) is imported lazily inside the
+# LM step builders below — launch/serve.py imports this module for the
+# Neural-SDE samplers, and the SDE workloads must never touch the LM stack.
 
 
 def make_optimizer(cfg: ArchConfig, peak_lr: float = 3e-4, warmup: int = 100,
@@ -24,6 +27,8 @@ def make_optimizer(cfg: ArchConfig, peak_lr: float = 3e-4, warmup: int = 100,
 
 def make_train_step(cfg: ArchConfig, opt_update=None, grad_clip: float = 1.0):
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    from ..models import transformer as T
+
     if opt_update is None:
         _, opt_update = make_optimizer(cfg)
 
@@ -265,8 +270,110 @@ def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
     return step
 
 
+# -----------------------------------------------------------------------------
+# Neural-SDE serving (DESIGN.md §9)
+# -----------------------------------------------------------------------------
+
+SERVE_WORKLOADS = ("sde-gan", "latent-sde")
+
+
+def make_sample_step(workload: str, cfg, latent_mode: str = "prior",
+                     obs_len: Optional[int] = None):
+    """Build the batched trajectory sampler for one serving bucket:
+    ``(params, keys) -> (num_steps+1, len(keys), data_dim)``.
+
+    launch/serve.py AOT-compiles this once per bucket shape; an off-size
+    coalesced request batch pads its key array up to the nearest bucket
+    instead of triggering a recompile.  Padding is safe by construction:
+    every row of the output is a pure function of ``(params, keys[i])``
+    alone (see the serving entry points in repro.core.sde), which
+    tests/test_serving.py pins bitwise.
+
+    The trajectory tensor is constrained to the repo's time-major layout
+    (``sharding.shard_time_major``), so under a data-parallel mesh GSPMD
+    shards every per-row solve by batch while the (tiny) parameters stay
+    replicated — the same layout as both training steps.
+
+    ``workload="latent-sde"`` serves the prior decode by default;
+    ``latent_mode="posterior"`` serves the encode→posterior-solve decode,
+    synthesising the observation payload (``obs_len`` points) per row key —
+    the smoke-shaped stand-in for a real observation channel, which would
+    ride as a second AOT argument with the same bucket shape.
+
+    All config/solver validation is eager: an illegal workload, latent
+    mode, or observation grid raises a named ValueError here, at build
+    time, never from inside the compiled sampler.
+    """
+    from ..core import sde as S
+    from ..distributed.sharding import shard_time_major
+
+    if workload not in SERVE_WORKLOADS:
+        raise ValueError(
+            f"workload must be one of {SERVE_WORKLOADS}, got {workload!r} "
+            f"(the transformer-LM decode loop lives behind launch/serve.py "
+            f"--workload lm, not this builder)")
+
+    if workload == "sde-gan":
+        def sample(params, keys):
+            return shard_time_major(
+                S.generator_sample_paths(params, cfg, keys))
+        return sample
+
+    if latent_mode not in ("prior", "posterior"):
+        raise ValueError(
+            f"latent_mode must be 'prior' or 'posterior', got {latent_mode!r}")
+    if latent_mode == "prior":
+        def sample(params, keys):
+            return shard_time_major(
+                S.latent_sde_sample_paths(params, cfg, keys))
+        return sample
+
+    if obs_len is None or obs_len < 2:
+        raise ValueError(
+            f"latent_mode='posterior' needs obs_len >= 2 observation points "
+            f"per request, got {obs_len!r}")
+    S.validate_latent_grid(cfg.num_steps, obs_len - 1)
+
+    def sample(params, keys):
+        from ..data.synthetic import air_quality_like
+
+        def obs_row(k):  # -> (obs_len, data_dim), a pure function of k
+            ys, _ = air_quality_like(jax.random.fold_in(k, 2), 1, obs_len,
+                                     dtype=cfg.dtype)
+            return ys[:, 0]
+
+        y_obs = jax.vmap(obs_row, out_axes=1)(keys)
+        return shard_time_major(
+            S.latent_sde_posterior_decode(params, cfg, keys, y_obs))
+
+    return sample
+
+
+def make_stream_chunk_step(cfg, span: float, num_steps: int):
+    """Build the streamed-rollout chunk step for long-horizon serving:
+    ``(params, keys, x0, t_start) -> (ys_chunk, xT)``.
+
+    ``t_start`` is a traced scalar, so ONE compiled program per bucket
+    serves every chunk of the horizon; launch/serve.py carries ``xT`` into
+    the next chunk and emits each ``ys_chunk`` as it completes (first-chunk
+    latency instead of full-horizon).  ``keys`` must be pre-folded per
+    chunk by the caller.  SDE-GAN generator only — the chunk carry is the
+    generator hidden state.
+    """
+    from ..core import sde as S
+    from ..distributed.sharding import shard_time_major
+
+    def chunk_step(params, keys, x0, t_start):
+        ys, xT = S.generator_rollout_chunk(params, cfg, keys, x0, t_start,
+                                           span, num_steps)
+        return shard_time_major(ys), xT
+
+    return chunk_step
+
+
 def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
     """(params, batch) -> (last-token logits, populated caches)."""
+    from ..models import transformer as T
 
     def prefill_step(params, batch: Dict[str, Any]):
         if cfg.family == "encdec":
@@ -281,6 +388,7 @@ def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
 def make_serve_step(cfg: ArchConfig):
     """(params, caches, token, pos) -> (logits, new caches).  One new token
     against a KV/state cache — the ``decode_*`` / ``long_*`` dry-run target."""
+    from ..models import transformer as T
 
     def serve_step(params, caches, token, pos):
         if cfg.family == "encdec":

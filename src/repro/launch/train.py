@@ -148,16 +148,13 @@ def _data_parallel_mesh(batch: int, tag: str):
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
     ``--host-devices`` flag below does this for you).
     """
-    from ..distributed.compat import make_mesh
+    from ..distributed.sharding import data_parallel_mesh
 
-    n_dev = len(jax.devices())
-    if n_dev <= 1:
-        return None
-    if batch % n_dev != 0:
-        print(f"[{tag}] batch {batch} not divisible by {n_dev} devices — "
-              f"running unsharded", flush=True)
-        return None
-    return make_mesh((n_dev,), ("data",))
+    mesh = data_parallel_mesh(batch)
+    if mesh is None and len(jax.devices()) > 1:
+        print(f"[{tag}] batch {batch} not divisible by "
+              f"{len(jax.devices())} devices — running unsharded", flush=True)
+    return mesh
 
 
 def _restore_or_fresh(ckpt_dir: Optional[str], template, tag: str):
@@ -181,7 +178,7 @@ def _restore_or_fresh(ckpt_dir: Optional[str], template, tag: str):
 
 def _sde_training_loop(tag: str, start: int, steps: int, batch: int, state,
                        step_fn, data_key, ckpt_dir: Optional[str],
-                       ckpt_every: int, on_step):
+                       ckpt_every: int, on_step, serving=None):
     """Shared step-loop scaffold for the Neural-SDE workloads (DESIGN.md
     §4/§8): data-parallel mesh over visible devices, straggler monitoring,
     periodic logging, step-granular atomic checkpoints.
@@ -190,6 +187,12 @@ def _sde_training_loop(tag: str, start: int, steps: int, batch: int, state,
     checkpointed pytree.  ``on_step(step, state, metrics, dt)`` handles
     logging and returns a scalar to record in the returned history (or
     ``None`` to record nothing for this step).
+
+    ``serving``: optional ``(workload, cfg, extract_params)`` handshake —
+    every checkpoint save also writes the params-only serving bundle
+    (``<ckpt_dir>/serving/``) that launch/serve.py restores from
+    (DESIGN.md §9).  ``extract_params(state)`` picks the servable subtree
+    (the generator for the GAN, the full VAE params for the latent SDE).
     """
     import contextlib
 
@@ -200,6 +203,13 @@ def _sde_training_loop(tag: str, start: int, steps: int, batch: int, state,
         print(f"[{tag}] data-parallel over {len(jax.devices())} devices",
               flush=True)
     mesh_ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+
+    def save(step, state):
+        ckpt.save_checkpoint(ckpt_dir, step, state)
+        if serving is not None:
+            workload, cfg, extract_params = serving
+            ckpt.save_serving_bundle(ckpt_dir, step, extract_params(state),
+                                     workload, cfg)
 
     monitor = StragglerMonitor()
     history = []
@@ -215,9 +225,9 @@ def _sde_training_loop(tag: str, start: int, steps: int, batch: int, state,
             if rec is not None:
                 history.append(rec)
             if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
-                ckpt.save_checkpoint(ckpt_dir, step + 1, state)
+                save(step + 1, state)
     if ckpt_dir is not None:
-        ckpt.save_checkpoint(ckpt_dir, steps, state)
+        save(steps, state)
     return state, history
 
 
@@ -279,7 +289,8 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
 
     (params, _, _), mmds = _sde_training_loop(
         "sde-gan", start, steps, batch, state, gan_step, data_key,
-        ckpt_dir, ckpt_every, on_step)
+        ckpt_dir, ckpt_every, on_step,
+        serving=("sde-gan", cfg, lambda s: s[0]["gen"]))
     return params, mmds
 
 
@@ -337,7 +348,8 @@ def train_latent_sde(steps: int, batch: int, ckpt_dir: Optional[str] = None,
 
     (params, _), losses = _sde_training_loop(
         "latent-sde", start, steps, batch, state, vae_step, data_key,
-        ckpt_dir, ckpt_every, on_step)
+        ckpt_dir, ckpt_every, on_step,
+        serving=("latent-sde", cfg, lambda s: s[0]))
     return params, losses
 
 
@@ -396,18 +408,9 @@ def main(argv=None):
                          "backend initialises; must come before any jax use)")
     args = ap.parse_args(argv)
     if args.host_devices is not None:
-        import os
+        from ..distributed.compat import force_host_device_count
 
-        try:  # backend already up ⇒ the flag would be silently ignored
-            initialised = bool(jax._src.xla_bridge._backends)
-        except AttributeError:  # internal layout moved; trust the caller
-            initialised = False
-        if initialised:
-            raise RuntimeError("--host-devices must be processed before jax "
-                               "initialises; set XLA_FLAGS instead")
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.host_devices}")
+        force_host_device_count(args.host_devices)
     if args.workload == "sde-gan":
         _, mmds = train_sde_gan(
             args.steps, args.batch, args.ckpt_dir, args.ckpt_every, args.seed,

@@ -1,0 +1,103 @@
+"""Bench-regression gate tests (benchmarks/report.py --compare).
+
+CI's bench-smoke job snapshots the committed BENCH_*.json trajectory, reruns
+the tiny preset, and fails on a >2× wall-clock regression of any gated
+(``*_ms``) metric.  These tests pin the gate's decision table: regression
+detected, within-factor pass, absent-from-baseline skip, preset/backend
+mismatch skip.
+"""
+
+import copy
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from benchmarks.report import _is_gated, compare_bench  # noqa: E402
+
+DOC = {
+    "schema": "repro-bench/v1",
+    "name": "serving",
+    "preset": "tiny",
+    "backend": "cpu",
+    "jax_version": "0.0.test",
+    "rows": [
+        {"suite": "serving", "label": "sde_gan_batch4_ms", "value": 10.0},
+        {"suite": "serving", "label": "sde_gan_traj_per_s,batch=4", "value": 400.0},
+        {"suite": "serving", "label": "latent_prior_fused_speedup", "value": 1.0},
+    ],
+}
+
+
+def _write(d, doc):
+    d.mkdir(exist_ok=True)
+    (d / "BENCH_serving.json").write_text(json.dumps(doc))
+
+
+def test_gated_labels_are_wall_clock_only():
+    assert _is_gated("serving", "sde_gan_batch4_ms")
+    assert _is_gated("clipping", "clipping_ms_per_step")
+    # solver_speed's bare labels predate the _ms convention but are all ms
+    assert _is_gated("solver_speed", "reversible_heun")
+    assert _is_gated("solver_speed_batching", "batched")
+    # higher-is-better / ratio / bytes rows are each suite's own gates
+    assert not _is_gated("serving", "sde_gan_traj_per_s,batch=4")
+    assert not _is_gated("latent_sde", "fused_speedup")
+    assert not _is_gated("latent_sde", "unfused_bytes_accessed")
+    assert not _is_gated("brownian", "sequential,size=1")  # VBT/BI ratio
+
+
+def test_compare_passes_within_factor(tmp_path):
+    fresh = copy.deepcopy(DOC)
+    fresh["rows"][0]["value"] = 19.0  # 1.9x < 2x: noisy but tolerated
+    _write(tmp_path / "base", DOC)
+    _write(tmp_path / "fresh", fresh)
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 0
+
+
+def test_compare_fails_on_2x_regression(tmp_path):
+    fresh = copy.deepcopy(DOC)
+    fresh["rows"][0]["value"] = 25.0  # 2.5x > 2x
+    _write(tmp_path / "base", DOC)
+    _write(tmp_path / "fresh", fresh)
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 1
+    # a looser explicit factor tolerates the same value
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh", factor=3.0) == 0
+
+
+def test_compare_skips_metrics_absent_from_baseline(tmp_path):
+    """A new row (or suite) cannot fail the PR that introduces it."""
+    fresh = copy.deepcopy(DOC)
+    fresh["rows"].append(
+        {"suite": "serving", "label": "brand_new_ms", "value": 1e9})
+    _write(tmp_path / "base", DOC)
+    _write(tmp_path / "fresh", fresh)
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 0
+    # ...and a baseline-less file is skipped wholesale
+    (tmp_path / "fresh" / "BENCH_new_suite.json").write_text(
+        json.dumps({**copy.deepcopy(DOC), "name": "new_suite"}))
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 0
+
+
+def test_compare_skips_sub_noise_floor_baselines(tmp_path):
+    """Sub-half-ms baselines are dispatch-noise-dominated; the ratio gate
+    skips them instead of flipping coins."""
+    base = copy.deepcopy(DOC)
+    base["rows"][0]["value"] = 0.3  # < COMPARE_NOISE_FLOOR_MS
+    fresh = copy.deepcopy(base)
+    fresh["rows"][0]["value"] = 3.0  # 10x, but unjudgeable
+    _write(tmp_path / "base", base)
+    _write(tmp_path / "fresh", fresh)
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 0
+
+
+def test_compare_skips_preset_or_backend_mismatch(tmp_path):
+    """A tiny-CPU baseline says nothing about a full-TPU run."""
+    fresh = copy.deepcopy(DOC)
+    fresh["rows"][0]["value"] = 1000.0  # would be a 100x "regression"
+    fresh["preset"] = "full"
+    _write(tmp_path / "base", DOC)
+    _write(tmp_path / "fresh", fresh)
+    assert compare_bench(tmp_path / "base", tmp_path / "fresh") == 0
