@@ -1,8 +1,27 @@
-"""Paper Appendix D.4 (Figs. 5/6): strong/weak convergence order.
+"""Paper Appendix D.4 (Figs. 5/6): strong/weak convergence order, plus the
+adaptive cost-vs-accuracy frontier (DESIGN.md §10).
 
-Anharmonic oscillator  dy = sin(y) dt + dW  (additive noise), y0 = 1, T = 1.
-Reversible Heun should show strong order ~1.0 and weak order ~2.0 in the
-additive-noise setting (Theorems D.13-D.17), matching standard Heun.
+Two experiments:
+
+1. **Order fits** — anharmonic oscillator ``dy = sin(y) dt + dW`` (additive
+   noise), y0 = 1, T = 1.  Reversible Heun should show strong order ~1.0
+   and weak order ~2.0 in the additive-noise setting (Theorems D.13-D.17),
+   matching standard Heun.
+
+2. **Frontier** (EXPERIMENTS.md §Frontier) — a time-localised stiffness
+   burst ``dy = θ(t)(m − y) dt + σ dW`` with ``θ(t) = a + A·exp(−((t−c)/w)²)``:
+   the dynamics are flat outside a narrow window, so an adaptive controller
+   concentrates its steps there.  Gates (asserted at run time):
+
+   * adaptive reversible Heun reaches its achieved strong error with
+     **fewer vector-field evaluations** than the fixed uniform grid that
+     error level requires (log-log interpolation of the fixed-grid error
+     curve), on a *shared* ``DenseBrownianPath`` per path;
+   * the accepted-step sequence replays **bitwise**: a plain scan over the
+     stored ``(ts, dts)`` reproduces the adaptive terminal state exactly;
+   * the exact adjoint's backward reconstruction over the accepted grid
+     matches the forward states to float64 round-off, and its parameter
+     gradient matches plain AD through the frozen-grid replay likewise.
 """
 
 from __future__ import annotations
@@ -50,6 +69,195 @@ def empirical_orders(solver: str, n_paths: int = 20_000):
 PRESET_PATHS = {"tiny": 2_000, "quick": 5_000, "full": 50_000}
 
 
+# -----------------------------------------------------------------------------
+# Adaptive cost-vs-accuracy frontier (DESIGN.md §10; EXPERIMENTS.md §Frontier)
+# -----------------------------------------------------------------------------
+
+#: Burst problem: θ(t) = BURST_A + BURST_AMP·exp(−((t−BURST_C)/BURST_W)²).
+#: Outside the window the dynamics are near-flat (big steps are fine);
+#: inside, explicit stability needs θ·dt ≲ 2 → dt ≲ 0.06.
+BURST_A, BURST_AMP, BURST_C, BURST_W = 0.5, 30.0, 0.5, 0.05
+BURST_SIGMA = 0.05
+FRONTIER_FINE = 4096
+FRONTIER_FIXED_GRIDS = (16, 32, 64, 128, 256, 512)
+PRESET_FRONTIER_PATHS = {"tiny": 64, "quick": 128, "full": 512}
+
+
+def _burst_fields():
+    def drift(p, t, y):
+        theta = BURST_A + BURST_AMP * jnp.exp(-(((t - BURST_C) / BURST_W) ** 2))
+        return theta * (1.0 - y)
+
+    def diffusion(p, t, y):
+        return BURST_SIGMA * jnp.ones_like(y)
+
+    return drift, diffusion
+
+
+def frontier(preset: str):
+    """NFE to reach a target strong error: adaptive vs best fixed grid."""
+    from repro.core.brownian import DenseBrownianPath
+    from repro.core.solve import solve_adaptive
+    from repro.core.solvers import sde_solve
+
+    drift, diffusion = _burst_fields()
+    n_paths = PRESET_FRONTIER_PATHS[preset]
+    key = jax.random.PRNGKey(7)
+    y0 = jnp.zeros((n_paths, 1), jnp.float64)
+    bm = DenseBrownianPath.sample(key, 0.0, 1.0, FRONTIER_FINE,
+                                  (n_paths, 1), jnp.float64)
+    ref = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, FRONTIER_FINE,
+                    solver="heun", save_trajectory=False)
+    ref = np.asarray(ref[..., 0])
+
+    # fixed uniform grids, all paths in one batched solve on the SAME path
+    fixed_err = []
+    for n in FRONTIER_FIXED_GRIDS:
+        zT = sde_solve(drift, diffusion, None, y0, bm, 0.0, 1.0, n,
+                       solver="reversible_heun", save_trajectory=False)
+        fixed_err.append(np.mean(np.abs(np.asarray(zT[..., 0]) - ref)))
+
+    # adaptive, one controller per path (vmapped), same dense sample paths
+    def one(wi, y0i):
+        bmi = DenseBrownianPath(wi, 0.0, 1.0)
+        z, st = solve_adaptive(drift, diffusion, None, y0i, bmi, 0.0, 1.0,
+                               solver="reversible_heun", rtol=2e-3, atol=1e-5,
+                               max_steps=2048, dt0=1.0 / 16)
+        return z, st.nfe, st.converged
+
+    zT_a, nfe, conv = jax.vmap(one)(jnp.moveaxis(bm.w, 1, 0), y0)
+    assert bool(jnp.all(conv)), "adaptive solves must converge within budget"
+    adaptive_err = float(np.mean(np.abs(np.asarray(zT_a[..., 0]) - ref)))
+    adaptive_nfe = float(np.mean(np.asarray(nfe)))
+
+    # fixed-grid NFE needed for the adaptive error level: log-log interp of
+    # the (error -> NFE) curve (NFE = num_steps + 1 at 1 eval/step).
+    # np.interp needs increasing xp; at finite path counts adjacent grids
+    # can invert by sampling noise, so force the coarsening-direction curve
+    # monotone (running max of error as grids coarsen) before interpolating
+    log_err = np.log(np.maximum.accumulate(np.asarray(fixed_err)[::-1]))
+    log_nfe = np.log(np.asarray(FRONTIER_FIXED_GRIDS, float)[::-1] + 1.0)
+    fixed_nfe_at_err = float(np.exp(np.interp(np.log(adaptive_err),
+                                              log_err, log_nfe)))
+    savings = fixed_nfe_at_err / adaptive_nfe
+    print(f"convergence_frontier,adaptive: err={adaptive_err:.2e} "
+          f"nfe={adaptive_nfe:.0f}; fixed grid needs "
+          f"~{fixed_nfe_at_err:.0f} nfe for that error "
+          f"({savings:.2f}x savings)", flush=True)
+    for n, e in zip(FRONTIER_FIXED_GRIDS, fixed_err):
+        print(f"convergence_frontier,fixed,n={n},err={e:.2e}", flush=True)
+    # THE gate: adaptive must beat the best fixed grid on evaluations
+    assert adaptive_nfe < fixed_nfe_at_err, (
+        f"adaptive stepping must reach its error with fewer NFEs than a "
+        f"uniform grid: adaptive {adaptive_nfe:.0f} vs fixed "
+        f"{fixed_nfe_at_err:.0f}")
+    return [
+        ("convergence_frontier", "adaptive_strong_error", adaptive_err),
+        ("convergence_frontier", "adaptive_nfe", adaptive_nfe),
+        ("convergence_frontier", "fixed_nfe_matching_error", fixed_nfe_at_err),
+        ("convergence_frontier", "nfe_savings_ratio", savings),
+    ]
+
+
+def replay_gates():
+    """Accepted-grid replay contract (float64): bitwise forward replay,
+    round-off-level backward reconstruction, exact-adjoint gradient ==
+    frozen-grid AD.
+
+    Every program here evaluates the IDENTICAL parametrised drift — the
+    accepted grid is a sequence of fp-boundary accept decisions, and two
+    XLA programs with *different* op graphs (e.g. one with a ``+θ`` the
+    other without) may round an ulp apart and flip a decision; identical
+    graphs compile to bit-identical loop bodies (the property the gate
+    pins).
+    """
+    from jax import lax
+
+    from repro.core.brownian import BrownianPath
+    from repro.core.solve import solve, solve_adaptive
+    from repro.core.solvers import (RevHeunState, apply_diffusion,
+                                    reversible_heun_step)
+
+    base_drift, diffusion = _burst_fields()
+    drift = lambda p, t, y: base_drift(None, t, y) + p["shift"]
+    p0 = {"shift": jnp.float64(0.0)}
+    key = jax.random.PRNGKey(3)
+    z0 = jnp.zeros((4,), jnp.float64)
+    bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float64)
+    rtol, atol, max_steps, dt0 = 1e-4, 1e-7, 2048, 1.0 / 16
+
+    zT, st = solve_adaptive(drift, diffusion, p0, z0, bm, 0.0, 1.0,
+                            solver="reversible_heun", rtol=rtol, atol=atol,
+                            max_steps=max_steps, dt0=dt0)
+    n = int(st.num_accepted)
+    ts, dts = st.ts, st.dts
+
+    def replay(p, z0_):
+        s0 = RevHeunState(z0_, z0_, drift(p, 0.0, z0_), diffusion(p, 0.0, z0_))
+
+        def body(s, i):
+            dw = bm.evaluate(ts[i], ts[i] + dts[i]).astype(z0_.dtype)
+            new = reversible_heun_step(s, ts[i], dts[i], dw, drift, diffusion,
+                                       p, "diagonal")
+            return new, s.z
+
+        fin, z_hist = lax.scan(body, s0, jnp.arange(n))
+        return fin, z_hist
+
+    fin, z_hist = replay(p0, z0)
+    bitwise_mismatch = float(jnp.sum(fin.z != zT))
+
+    def reverse(s, i):
+        dt, tl = dts[i], ts[i]
+        dw = bm.evaluate(tl, tl + dt).astype(z0.dtype)
+        z1, zh1, mu1, s1 = s
+        zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(s1, dw, "diagonal")
+        mu = drift(p0, tl, zh)
+        sg = diffusion(p0, tl, zh)
+        z = z1 - 0.5 * (mu + mu1) * dt - apply_diffusion(0.5 * (sg + s1), dw,
+                                                         "diagonal")
+        return RevHeunState(z, zh, mu, sg), z
+
+    _, z_rec = lax.scan(reverse, fin, jnp.arange(n - 1, -1, -1))
+    recon_err = float(jnp.max(jnp.abs(z_rec[::-1] - z_hist)))
+
+    g_adj = jax.grad(lambda p: jnp.sum(solve(
+        drift, diffusion, p, z0, bm, 0.0, 1.0, 16,
+        solver="reversible_heun", gradient_mode="reversible_adjoint",
+        save_trajectory=False, adaptive=True, rtol=rtol, atol=atol,
+        max_steps=max_steps, dt0=dt0) ** 2))(p0)
+
+    def replay_p(p):
+        s0 = RevHeunState(z0, z0, drift(p, 0.0, z0), diffusion(p, 0.0, z0))
+
+        def body(s, i):
+            dw = bm.evaluate(ts[i], ts[i] + dts[i]).astype(z0.dtype)
+            return reversible_heun_step(s, ts[i], dts[i], dw, drift,
+                                        diffusion, p, "diagonal"), None
+
+        fin_, _ = lax.scan(body, s0, jnp.arange(n))
+        return jnp.sum(fin_.z ** 2)
+
+    g_rep = jax.grad(replay_p)(p0)
+    grad_err = float(jnp.max(jnp.abs(g_adj["shift"] - g_rep["shift"])))
+
+    print(f"convergence_frontier,replay: accepted={n} "
+          f"bitwise_mismatch={bitwise_mismatch:.0f} "
+          f"reconstruction_err={recon_err:.2e} grad_err={grad_err:.2e}",
+          flush=True)
+    assert bitwise_mismatch == 0.0, \
+        "forward replay over the stored accepted grid must be bitwise"
+    assert recon_err < 1e-12, \
+        f"backward reconstruction must be at float64 round-off: {recon_err}"
+    assert grad_err < 1e-10, \
+        f"exact adjoint must match frozen-grid AD: {grad_err}"
+    return [
+        ("convergence_frontier", "replay_bitwise_mismatch", bitwise_mismatch),
+        ("convergence_frontier", "reconstruction_max_err", recon_err),
+        ("convergence_frontier", "adjoint_vs_replay_grad_err", grad_err),
+    ]
+
+
 def main(preset: str = "full"):
     jax.config.update("jax_enable_x64", True)
     n_paths = PRESET_PATHS[preset]
@@ -60,6 +268,8 @@ def main(preset: str = "full"):
         rows.append(("convergence", f"{solver}_weak_order", w_ord))
         print(f"convergence,{solver},strong_order={s_ord:.2f},"
               f"weak_order={w_ord:.2f}", flush=True)
+    rows += frontier(preset)
+    rows += replay_gates()
     jax.config.update("jax_enable_x64", False)
     return rows
 

@@ -144,6 +144,54 @@ def bench_batched_vs_looped(batch: int = 32, num_steps: int = 64,
             "looped": _timeit(looped, z0, keys, reps=reps)}
 
 
+def bench_adaptive_vs_fixed(batch: int = 256, x_dim: int = 32,
+                            fixed_steps: int = 200, reps: int = 3):
+    """Adaptive terminal solve vs the fixed grid of matching accuracy.
+
+    The same time-localised stiffness burst ``benchmarks/convergence.py``
+    measures: there the adaptive controller reaches its strong error with
+    ~117 evaluations while a uniform grid needs ~200 (the
+    ``convergence_frontier`` gate) — so ``fixed_steps`` defaults to that
+    matched-error grid.  These rows track the wall-clock *realisation* of
+    the NFE saving, regression-gated like every other ``_ms`` row.  Note
+    the CPU caveat (EXPERIMENTS.md §Frontier): with a trivial scalar field
+    each adaptive attempt is dominated by the 24-level Lévy-bridge descent
+    (one ``bm.value`` per attempt), so off-accelerator wall clock favours
+    the fixed grid even though the adaptive solve does ~40% fewer
+    vector-field evaluations — the lever pays when the field itself (a
+    neural network on an accelerator) dwarfs the Brownian query.  The
+    batch/x_dim defaults are sized so both rows are compute-bound
+    (hundreds of ms): dispatch-noise-scale timings would make the 2× CI
+    regression gate a coin flip.
+    """
+    from repro.core.brownian import BrownianPath
+    from repro.core.solve import solve, solve_adaptive
+
+    try:  # the SAME burst problem the convergence_frontier gate measures
+        from .convergence import _burst_fields
+    except ImportError:  # run as a loose script
+        from convergence import _burst_fields
+
+    drift, diffusion = _burst_fields()
+    key = jax.random.PRNGKey(5)
+    z0 = jnp.zeros((batch, x_dim), jnp.float32)
+    bm = BrownianPath(key, 0.0, 1.0, (batch, x_dim), jnp.float32)
+
+    adaptive = jax.jit(lambda z: solve(
+        drift, diffusion, None, z, bm, 0.0, 1.0, 16,
+        solver="reversible_heun", save_trajectory=False,
+        adaptive=True, rtol=2e-3, atol=1e-5, max_steps=2048))
+    fixed = jax.jit(lambda z: solve(
+        drift, diffusion, None, z, bm, 0.0, 1.0, fixed_steps,
+        solver="reversible_heun", save_trajectory=False))
+    _, stats = solve_adaptive(drift, diffusion, None, z0, bm, 0.0, 1.0,
+                              solver="reversible_heun", rtol=2e-3, atol=1e-5,
+                              max_steps=2048, dt0=1.0 / 16)
+    return {"adaptive": _timeit(adaptive, z0, reps=reps),
+            "fixed_matched_error": _timeit(fixed, z0, reps=reps)}, \
+        float(stats.nfe)
+
+
 PRESET_SHAPES = {
     #          reps, solver num_steps/batch, fused num_steps/batch, looped batch/num_steps
     "tiny":  (2, 16, 32, 8, 16, 4, 8),
@@ -186,6 +234,15 @@ def main(preset: str = "full"):
         print(f"solver_speed_batching,{k},{v*1e3:.2f}ms", flush=True)
     print(f"solver_speed_batching,batched_speedup,"
           f"{bl['looped'] / bl['batched']:.2f}x", flush=True)
+
+    ad, nfe = bench_adaptive_vs_fixed(reps=reps)
+    for k, v in ad.items():
+        rows.append(("solver_speed_adaptive", f"{k}_ms", v * 1e3))
+        print(f"solver_speed_adaptive,{k},{v*1e3:.2f}ms", flush=True)
+    rows.append(("solver_speed_adaptive", "adaptive_nfe", nfe))
+    print(f"solver_speed_adaptive,adaptive_nfe,{nfe:.0f} "
+          f"(vs ~200 fixed at matched error; accuracy gate lives in "
+          f"convergence_frontier)", flush=True)
     return rows
 
 

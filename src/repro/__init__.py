@@ -34,9 +34,11 @@ repro.launch (mesh / dryrun / train / serve).
 from .core.solve import (  # noqa: F401
     GRADIENT_MODES,
     SOLVERS,
+    AdaptiveStats,
     SolverSpec,
     available_solvers,
     solve,
+    solve_adaptive,
     solve_batched,
 )
 

@@ -255,6 +255,151 @@ reversible_heun_solve_final.defvjp(_fwd_rule_final, _bwd_rule_final)
 
 
 # =============================================================================
+# Adaptive reversible Heun with exact adjoint over the accepted grid
+# =============================================================================
+#
+# The adaptive forward (repro.core.solve._adaptive_loop) accepts steps on a
+# controller-chosen non-uniform grid.  The replay contract (DESIGN.md §10):
+# the forward stores ONLY the accepted-step scalars ``(ts, dts)`` —
+# O(max_steps) scalar memory, no trajectory storage — and the backward
+# re-derives each step's Brownian increment as ``bm.evaluate(ts[i],
+# ts[i] + dts[i])``, the bit-identical expression the forward evaluated,
+# then algebraically reverses the step (Algorithm 2).  Rejected attempts
+# never enter the buffers: gradients see exactly the accepted sequence.
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 7, 8, 9, 10, 11))
+def reversible_heun_solve_adaptive(
+    drift: Callable,
+    diffusion: Callable,
+    params,
+    z0: jax.Array,
+    bm: BrownianPath,
+    rtol,
+    atol,
+    t0: float,
+    t1: float,
+    max_steps: int,
+    dt0: float,
+    noise: str = "diagonal",
+):
+    """``(z_T, converged)`` of the adaptive reversible-Heun solve; exact
+    adjoint on ``z_T``.
+
+    ``converged`` rides along so the caller can refuse to treat a
+    budget-exhausted state at ``t_final < t1`` as ``z_T`` (solve()
+    NaN-poisons it); its cotangent is ignored.  ``rtol``/``atol`` sit in
+    differentiable positions so they may be traced scalars (per-request
+    tolerance in serving) — their cotangents are zero.  Callers go through
+    ``repro.solve(..., adaptive=True,
+    gradient_mode="reversible_adjoint")``.
+    """
+    final, stats = _adaptive_forward(drift, diffusion, params, z0, bm,
+                                     rtol, atol, t0, t1, max_steps, dt0,
+                                     noise)
+    return final.z, stats.converged
+
+
+def _adaptive_forward(drift, diffusion, params, z0, bm, rtol, atol,
+                      t0, t1, max_steps, dt0, noise):
+    # late import: solve.py imports this module at load time (the driver
+    # lives there per the front-end layering; by call time it is loaded)
+    from .solve import _adaptive_loop, get_solver
+
+    return _adaptive_loop(get_solver("reversible_heun"), drift, diffusion,
+                          params, z0, bm, t0, t1, rtol, atol, max_steps,
+                          dt0, noise)
+
+
+def _fwd_rule_adaptive(drift, diffusion, params, z0, bm, rtol, atol,
+                       t0, t1, max_steps, dt0, noise):
+    final, stats = _adaptive_forward(drift, diffusion, params, z0, bm,
+                                     rtol, atol, t0, t1, max_steps, dt0,
+                                     noise)
+    # O(max_steps)-scalar residuals: terminal solver state + the accepted
+    # (t, dt) sequence (+ params, bm key).  rtol/atol ride along only to
+    # shape their zero cotangents.
+    return (final.z, stats.converged), (
+        params, final, bm, stats.dts, stats.ts,
+        stats.num_accepted, jnp.asarray(rtol), jnp.asarray(atol))
+
+
+def _bwd_rule_adaptive(drift, diffusion, t0, t1, max_steps, dt0, noise,
+                       residuals, g_out):
+    g_zT, _g_converged = g_out  # bool output: float0 cotangent, discarded
+    params, final, bm, dts, ts, n_acc, rtol, atol = residuals
+    dtype = final.z.dtype
+
+    def local_forward(params_, z, zh, mu, sigma, t, dt, dw):
+        return tuple(reversible_heun_step(
+            RevHeunState(z, zh, mu, sigma), t, dt, dw, drift, diffusion,
+            params_, noise))
+
+    g_params0 = jax.tree.map(jnp.zeros_like, params)
+    zeros = jnp.zeros_like(final.z)
+    carry0 = (final, (g_zT, zeros, zeros, jnp.zeros_like(final.sigma)),
+              g_params0)
+
+    def body(loop_carry):
+        i, carry = loop_carry
+
+        def replay(carry):
+            state1, cts, g_params = carry
+            # ``i`` can sit below 0 on vmap lanes that finished early (the
+            # batched while_loop keeps stepping them; lax.cond lowers to
+            # select there) — clamp so the discarded computation stays
+            # in-bounds and finite
+            j = jnp.maximum(i, 0)
+            dt = dts[j]
+            t_left = ts[j]
+            # same value-difference (and astype order) as the forward
+            # driver, so dw is bit-identical to what the accepted step saw
+            if hasattr(bm, "value"):
+                dw = (bm.value(t_left + dt).astype(dtype)
+                      - bm.value(t_left).astype(dtype))
+            else:
+                dw = bm.evaluate(t_left, t_left + dt).astype(dtype)
+            # Algorithm 2 inline, anchored on the STORED left endpoint so
+            # the vector fields are evaluated at bit-identical times (the
+            # helper's ``t1 - dt`` would reintroduce fp drift).
+            z1, zh1, mu1, sigma1 = state1
+            zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
+            mu = drift(params, t_left, zh)
+            sigma = diffusion(params, t_left, zh)
+            z = z1 - 0.5 * (mu + mu1) * dt - apply_diffusion(
+                0.5 * (sigma + sigma1), dw, noise)
+            state0 = RevHeunState(z, zh, mu, sigma)
+            _, vjp = jax.vjp(
+                lambda p, z_, zh_, mu_, sigma_: local_forward(
+                    p, z_, zh_, mu_, sigma_, t_left, dt, dw),
+                params, state0.z, state0.zh, state0.mu, state0.sigma)
+            dparams, d_z, d_zh, d_mu, d_sigma = vjp(cts)
+            g_params = jax.tree.map(jnp.add, g_params, dparams)
+            return (state0, (d_z, d_zh, d_mu, d_sigma), g_params)
+
+        return (i - 1, lax.cond(i >= 0, replay, lambda c: c, carry))
+
+    # walk i = n_acc-1 .. 0: the trip count is the ACCEPTED count, not
+    # max_steps — under vmap the batched loop runs max(n_acc) iterations
+    # instead of paying the full padded buffer per trajectory (cond lowers
+    # to select there, so padded slots would otherwise do real work)
+    _, (state0, cts, g_params) = lax.while_loop(
+        lambda c: c[0] >= 0, body, (n_acc - 1, carry0))
+
+    def init_fn(params_, z0_):
+        return z0_, z0_, drift(params_, t0, z0_), diffusion(params_, t0, z0_)
+
+    _, vjp0 = jax.vjp(init_fn, params, state0.z)
+    dparams0, g_z0 = vjp0(cts)
+    g_params = jax.tree.map(jnp.add, g_params, dparams0)
+    return (g_params, g_z0, _float0_zeros(bm),
+            jnp.zeros_like(rtol), jnp.zeros_like(atol))
+
+
+reversible_heun_solve_adaptive.defvjp(_fwd_rule_adaptive, _bwd_rule_adaptive)
+
+
+# =============================================================================
 # Continuous adjoint (optimise-then-discretise) baseline — eq. (6)
 # =============================================================================
 

@@ -103,6 +103,12 @@ class BrownianPath:
         """``W_t - W_s`` via ``W(t) - W(s)`` with dyadic bridge descent."""
         return self._w(t, depth) - self._w(s, depth)
 
+    def value(self, t, depth: int = 24) -> jax.Array:
+        """``W(t) - W(t0)`` — one bridge descent.  Contract (relied on by
+        the adaptive driver, which carries the left-endpoint value):
+        ``evaluate(s, t) == value(t) - value(s)`` bitwise."""
+        return self._w(t, depth)
+
     def _w(self, t, depth: int) -> jax.Array:
         """Sample W(t) by descending the virtual dyadic tree to ``depth``.
 
@@ -158,18 +164,22 @@ class DenseBrownianPath:
     per-grid refinements that agree in law but not pathwise)."""
 
     w: jax.Array  # (fine_steps, *shape) increments on the finest grid
+    t0: float = 0.0
+    t1: float = 1.0
 
     def tree_flatten(self):
-        return (self.w,), None
+        return (self.w,), (self.t0, self.t1)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(w=children[0])
+        t0, t1 = aux
+        return cls(w=children[0], t0=t0, t1=t1)
 
     @classmethod
     def sample(cls, key, t0: float, t1: float, fine_steps: int, shape,
                dtype=jnp.float32):
-        return cls(brownian_increments(key, t0, t1, fine_steps, shape, dtype))
+        return cls(brownian_increments(key, t0, t1, fine_steps, shape, dtype),
+                   t0=t0, t1=t1)
 
     @property
     def fine_steps(self) -> int:
@@ -182,6 +192,44 @@ class DenseBrownianPath:
         if r == 1:
             return lax.dynamic_index_in_dim(self.w, n, 0, keepdims=False)
         return jnp.sum(lax.dynamic_slice_in_dim(self.w, n * r, r, 0), axis=0)
+
+    # -- arbitrary-interval queries (adaptive solvers) -----------------------
+    def _w_at(self, t) -> jax.Array:
+        """W(t) from the stored fine increments: exact at fine-grid nodes
+        (prefix sums of ``w``), linearly interpolated inside a fine cell.
+        The interpolation is the bridge *mean* — deterministic, so
+        ``evaluate`` stays exactly additive — but it under-resolves
+        variation below the fine grid; size ``fine_steps`` well above the
+        expected adaptive step count.
+
+        The prefix sum is recomputed per query rather than cached on the
+        pytree: under jit it is a loop constant (XLA hoists it out of the
+        adaptive while_loop), and the eager payers are tests/benchmarks —
+        a second ``cum`` leaf would complicate every vmap-constructed
+        ``DenseBrownianPath(w_i, ...)`` for an O(fine_steps) win nothing
+        on the hot path needs."""
+        dtype = self.w.dtype
+        t = jnp.asarray(t, dtype)
+        pos = (t - self.t0) / (self.t1 - self.t0) * self.fine_steps
+        pos = jnp.clip(pos, 0.0, float(self.fine_steps))
+        i = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, self.fine_steps - 1)
+        frac = pos - i.astype(dtype)
+        cum = jnp.cumsum(self.w, axis=0)  # cum[k] = W(node k+1) − W(t0)
+        w_lo = jnp.where(i > 0, lax.dynamic_index_in_dim(
+            cum, jnp.maximum(i - 1, 0), 0, keepdims=False), jnp.zeros_like(self.w[0]))
+        inc = lax.dynamic_index_in_dim(self.w, i, 0, keepdims=False)
+        return w_lo + frac * inc
+
+    def evaluate(self, s, t) -> jax.Array:
+        """``W_t − W_s``; pathwise-consistent with :meth:`increment` (sums of
+        the same fine increments) and exactly additive over adjacent
+        intervals, because every query is a difference of ``W(·)``."""
+        return self._w_at(t) - self._w_at(s)
+
+    def value(self, t) -> jax.Array:
+        """``W(t) − W(t0)`` (see :meth:`BrownianPath.value` for the
+        ``evaluate(s,t) == value(t) − value(s)`` contract)."""
+        return self._w_at(t)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -222,6 +270,9 @@ class VirtualBrownianTree:
 
     def evaluate(self, s, t) -> jax.Array:
         return self._w(t) - self._w(s)
+
+    def value(self, t) -> jax.Array:
+        return self._w(t)
 
     def increment(self, n: jax.Array, num_steps: int) -> jax.Array:
         dt = (self.t1 - self.t0) / num_steps

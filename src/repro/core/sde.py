@@ -512,6 +512,44 @@ def generator_sample_paths(params, cfg: NeuralSDEConfig, keys):
     return jax.vmap(one, out_axes=1)(keys)
 
 
+def generator_sample_terminal(params, cfg: NeuralSDEConfig, keys, rtol, atol,
+                              max_steps: Optional[int] = None):
+    """Adaptive terminal-distribution sampling for serving: one terminal
+    sample ``Y_T`` per key, solved to a *requested accuracy* instead of a
+    fixed grid (DESIGN.md §10).
+
+    ``rtol``/``atol`` may be **traced scalars** — one compiled sampler
+    serves every tolerance, which is how launch/serve.py offers per-request
+    tolerance without a recompile per tolerance.  The same bucket-padding
+    invariant as the other serving entry points holds: each row is a pure
+    function of ``(params, keys[i], rtol, atol)``.
+
+    Returns ``(samples, converged)``: ``(B, data_dim)`` terminal samples
+    plus a ``(B,)`` bool marking rows whose controller reached ``t1``
+    within the step budget — a row with ``converged[i] == False`` is the
+    state at ``t_final < t1``, and the serving loop must surface it rather
+    than hand it to a client as ``Y_T`` (solver × adaptive validation
+    itself happens inside :func:`repro.core.solve.solve_adaptive`).
+    """
+    if max_steps is None:
+        max_steps = max(4 * cfg.num_steps, 256)
+
+    def one(k):
+        kv, kw = jax.random.split(k)
+        v = jax.random.normal(kv, (cfg.initial_noise_dim,), cfg.dtype)
+        x0 = nn.mlp(params["zeta"], v, nn.lipswish)
+        bm = BrownianPath(kw, 0.0, cfg.t1, (cfg.noise_dim,), cfg.dtype)
+        from .solve import solve_adaptive
+
+        xT, stats = solve_adaptive(
+            gen_drift(cfg), gen_diffusion(cfg), params, x0, bm, 0.0, cfg.t1,
+            solver=cfg.solver, rtol=rtol, atol=atol, max_steps=max_steps,
+            dt0=cfg.t1 / cfg.num_steps, noise="general")
+        return nn.linear(params["ell"], xT), stats.converged
+
+    return jax.vmap(one)(keys)
+
+
 def generator_initial_state(params, cfg: NeuralSDEConfig, keys):
     """x₀ = ζ_θ(V) per key — the entry state for the streamed (time-chunked)
     rollout in launch/serve.py.  Returns (B, hidden_dim)."""

@@ -39,20 +39,27 @@ for the whole ensemble instead of a Python loop of solves.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+from jax import lax
 
 from .adjoint import (
     continuous_adjoint_solve,
     reversible_heun_solve,
+    reversible_heun_solve_adaptive,
     reversible_heun_solve_final,
 )
 from .brownian import BrownianPath
 from .solvers import (
+    RevHeunState,
     _euler_maruyama_step,
+    _heun_embedded_step,
     _heun_step,
+    _midpoint_embedded_step,
     _midpoint_step,
+    reversible_heun_embedded_step,
     reversible_heun_reverse_step,
     reversible_heun_step,
     sde_solve,
@@ -61,11 +68,13 @@ from .solvers import (
 __all__ = [
     "GRADIENT_MODES",
     "SOLVERS",
+    "AdaptiveStats",
     "SolverSpec",
     "available_solvers",
     "get_solver",
     "register_solver",
     "solve",
+    "solve_adaptive",
     "solve_batched",
 ]
 
@@ -89,6 +98,10 @@ class SolverSpec:
         supports_pallas: whether the fused Pallas step kernels apply.
         sde_type: "ito" or "stratonovich".
         notes: one-line description (surfaced in README's inventory table).
+        embedded_stepper: ``(carry, t, dt, dw, drift, diffusion, params,
+            noise) -> (carry_new, err)`` embedded-pair step for adaptive
+            error control, or ``None`` for solvers with no free embedded
+            estimate (``adaptive=True`` is rejected for those).
     """
 
     name: str
@@ -100,6 +113,7 @@ class SolverSpec:
     supports_pallas: bool = False
     sde_type: str = "stratonovich"
     notes: str = ""
+    embedded_stepper: Optional[Callable] = None
 
     @property
     def reversible(self) -> bool:
@@ -143,20 +157,23 @@ register_solver(SolverSpec(
     "midpoint", _midpoint_step, None,
     nfe_per_step=2, strong_order=0.5,
     gradient_modes=("discretise", "continuous_adjoint"),
-    notes="paper's main baseline"))
+    notes="paper's main baseline",
+    embedded_stepper=_midpoint_embedded_step))
 
 register_solver(SolverSpec(
     "heun", _heun_step, None,
     nfe_per_step=2, strong_order=0.5,
     gradient_modes=("discretise", "continuous_adjoint"),
-    notes="trapezoidal"))
+    notes="trapezoidal",
+    embedded_stepper=_heun_embedded_step))
 
 register_solver(SolverSpec(
     "reversible_heun", reversible_heun_step, reversible_heun_reverse_step,
     nfe_per_step=1, strong_order=0.5,
     gradient_modes=("discretise", "reversible_adjoint"),
     supports_pallas=True,
-    notes="algebraically reversible; O(1)-memory exact adjoint (paper §3)"))
+    notes="algebraically reversible; O(1)-memory exact adjoint (paper §3)",
+    embedded_stepper=reversible_heun_embedded_step))
 
 
 #: Solvers the continuous-adjoint backward integrator (adjoint.py) actually
@@ -166,7 +183,8 @@ _CONTINUOUS_ADJOINT_BACKWARDS = ("euler_maruyama", "midpoint", "heun")
 
 
 def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
-              use_pallas_kernels: bool, save_trajectory: bool) -> None:
+              use_pallas_kernels: bool, save_trajectory: bool,
+              adaptive: bool = False) -> None:
     if gradient_mode not in GRADIENT_MODES:
         raise ValueError(
             f"unknown gradient_mode {gradient_mode!r}; one of {GRADIENT_MODES}")
@@ -213,6 +231,208 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
         raise ValueError(
             "continuous_adjoint backpropagates a terminal-value cotangent "
             "only — call solve(..., save_trajectory=False)")
+    if adaptive:
+        if spec.embedded_stepper is None:
+            raise ValueError(
+                f"solver {spec.name!r} has no embedded error estimate, so "
+                f"adaptive=True has nothing to control the step size with "
+                f"(embedded pairs: "
+                f"{[s.name for s in SOLVERS.values() if s.embedded_stepper is not None]}"
+                f"); use a fixed grid or switch solver")
+        if save_trajectory:
+            raise ValueError(
+                "adaptive=True accepts steps on a solver-chosen non-uniform "
+                "grid, which save_trajectory's fixed (num_steps+1)-point "
+                "output grid cannot represent — call solve(..., "
+                "save_trajectory=False) for the terminal value (or "
+                "solve_adaptive for the accepted-grid stats)")
+        if gradient_mode == "continuous_adjoint":
+            raise ValueError(
+                "adaptive=True is incompatible with gradient_mode="
+                "'continuous_adjoint': the eq.-(6) backward integrator "
+                "re-integrates on the forward's fixed uniform grid; use "
+                "'reversible_adjoint' (exact adjoint replaying the accepted "
+                "grid) or 'discretise' (forward simulation only)")
+        if use_pallas_kernels:
+            raise ValueError(
+                "adaptive=True is incompatible with use_pallas_kernels: the "
+                "fused step kernels require a static dt, and the adaptive "
+                "controller's dt is a traced value")
+
+
+# =============================================================================
+# Adaptive stepping: PI-controlled accept/reject driver (DESIGN.md §10)
+# =============================================================================
+
+#: PI step-size controller gains (Gustafsson; DESIGN.md §10).  With the
+#: normalised error ratio r_n (accept iff r_n <= 1) the next step is
+#:   dt' = dt * clip(SAFETY * r_n^-BETA1 * r_prev^BETA2, FMIN, FMAX)
+#: where r_prev is the ratio of the last *accepted* step.  BETA1 = kI + kP
+#: and BETA2 = kP with kI = 0.3/k, kP = 0.4/k for embedded-pair order k = 2.
+_PI_SAFETY = 0.9
+_PI_BETA1 = 0.35
+_PI_BETA2 = 0.2
+_PI_FACTOR_MIN = 0.2
+_PI_FACTOR_MAX = 5.0
+_MIN_ERR_RATIO = 1e-10  # a zero error estimate must not produce dt = inf
+
+
+class AdaptiveStats(NamedTuple):
+    """Controller diagnostics of one adaptive solve (all in-graph arrays).
+
+    ``dts``/``ts`` are ``(max_steps,)`` scalar buffers: entry ``i <
+    num_accepted`` holds accepted step ``i``'s size and left endpoint; the
+    tail is zero-padding.  ``nfe`` counts drift+diffusion evaluation pairs
+    including rejected attempts (the cost the paper's tables report).
+    ``converged`` is False when the step budget ran out before ``t1`` —
+    the terminal value then sits at ``t_final``, not ``t1``.
+    """
+
+    num_accepted: jax.Array
+    num_rejected: jax.Array
+    nfe: jax.Array
+    t_final: jax.Array
+    converged: jax.Array
+    dts: jax.Array
+    ts: jax.Array
+
+
+def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
+                   rtol, atol, max_steps: int, dt0, noise):
+    """Bounded ``lax.while_loop`` accept/reject driver.
+
+    Brownian increments come from ``bm.evaluate(t, t + dt)`` — arbitrary-
+    interval queries on ONE underlying sample path, so a rejected step and
+    its halved retry see pathwise-consistent noise (the Lévy-bridge
+    conditioning of the paper's eq. (8)).  The loop runs at most
+    ``2 * max_steps`` iterations (``max_steps`` accepts + ``max_steps``
+    rejects); if the budget is exhausted the solve stops early and
+    ``stats.converged`` is False.
+
+    Returns ``(final_carry, AdaptiveStats)``.  The accepted ``(ts, dts)``
+    scalars are the replay contract consumed by the exact adjoint
+    (repro.core.adjoint): the backward pass re-derives every accepted
+    step's ``(t, dt, dw)`` bit-identically from them.
+    """
+    dtype = z0.dtype
+    step = spec.embedded_stepper
+    rev = spec.stepper is reversible_heun_step
+    if rev:
+        carry0 = RevHeunState(z0, z0, drift(params, t0, z0),
+                              diffusion(params, t0, z0))
+        get_z = lambda c: c.z
+    else:
+        carry0 = z0
+        get_z = lambda c: c
+    rtol = jnp.asarray(rtol, dtype)
+    atol = jnp.asarray(atol, dtype)
+    t1a = jnp.asarray(t1, dtype)
+    zeros = jnp.zeros((max_steps,), dtype)
+    # Carrying W(t_left) halves the per-attempt Brownian cost when the path
+    # offers single-point queries: one bridge descent (the right endpoint)
+    # instead of evaluate's two.  Relies on the documented contract
+    # ``evaluate(s, t) == value(t) - value(s)`` bitwise, which keeps the
+    # backward replay (via evaluate) bit-identical to the forward.
+    has_value = hasattr(bm, "value")
+    w_left0 = bm.value(t0).astype(dtype) if has_value else jnp.zeros((), dtype)
+    state0 = (carry0, jnp.asarray(t0, dtype), jnp.asarray(dt0, dtype),
+              jnp.asarray(1.0, dtype), jnp.asarray(0, jnp.int32),
+              jnp.asarray(0, jnp.int32), zeros, zeros, w_left0,
+              jnp.asarray(False))
+
+    def cond(s):
+        _, _, _, _, n_acc, n_rej, _, _, _, done = s
+        return (~done) & (n_acc < max_steps) & (n_rej < max_steps)
+
+    def body(s):
+        carry, t, dt, prev_ratio, n_acc, n_rej, dts, ts, w_left, done = s
+        # ``done`` lanes only arise under vmap (the batched while_loop keeps
+        # stepping finished lanes until every lane finishes) — guard them.
+        active = ~done
+        remaining = t1a - t
+        is_last = dt >= remaining
+        dt_eff = jnp.minimum(dt, remaining)
+        if has_value:
+            w_right = bm.value(t + dt_eff).astype(dtype)
+            dw = w_right - w_left
+        else:
+            w_right = w_left
+            dw = bm.evaluate(t, t + dt_eff).astype(dtype)
+        cand, err = step(carry, t, dt_eff, dw, drift, diffusion, params, noise)
+        scale = atol + rtol * jnp.maximum(jnp.abs(get_z(carry)),
+                                          jnp.abs(get_z(cand)))
+        ratio = jnp.sqrt(jnp.mean(jnp.square(err / scale)))
+        ratio = jnp.maximum(ratio, _MIN_ERR_RATIO)
+        accept = (ratio <= 1.0) & active
+        # PI controller; a rejected step must shrink (safety < 1 and both
+        # ratio powers <= 1 there), an accepted one may grow up to FMAX.
+        factor = _PI_SAFETY * ratio ** (-_PI_BETA1) * prev_ratio ** _PI_BETA2
+        factor = jnp.clip(factor, _PI_FACTOR_MIN, _PI_FACTOR_MAX)
+        factor = jnp.where(accept, factor, jnp.minimum(factor, 1.0))
+        carry_new = jax.tree.map(lambda a, b: jnp.where(accept, a, b),
+                                 cand, carry)
+        dts = dts.at[n_acc].set(jnp.where(accept, dt_eff, dts[n_acc]))
+        ts = ts.at[n_acc].set(jnp.where(accept, t, ts[n_acc]))
+        return (carry_new,
+                jnp.where(accept, jnp.where(is_last, t1a, t + dt_eff), t),
+                jnp.where(active, dt_eff * factor, dt),
+                jnp.where(accept, ratio, prev_ratio),
+                n_acc + accept.astype(jnp.int32),
+                n_rej + (active & ~accept).astype(jnp.int32),
+                dts, ts,
+                jax.tree.map(lambda a, b: jnp.where(accept, a, b),
+                             w_right, w_left),
+                done | (accept & is_last))
+
+    carry, t, _, _, n_acc, n_rej, dts, ts, _, done = lax.while_loop(
+        cond, body, state0)
+    nfe = (n_acc + n_rej) * spec.nfe_per_step + (1 if rev else 0)
+    stats = AdaptiveStats(n_acc, n_rej, nfe, t, done, dts, ts)
+    return carry, stats
+
+
+def _check_adaptive_bm(bm) -> None:
+    if not hasattr(bm, "evaluate"):
+        raise ValueError(
+            f"adaptive=True queries Brownian increments over solver-chosen "
+            f"intervals via bm.evaluate(s, t); {type(bm).__name__} has no "
+            f"evaluate method — use BrownianPath, VirtualBrownianTree or "
+            f"DenseBrownianPath")
+
+
+def solve_adaptive(
+    drift: Callable,
+    diffusion: Callable,
+    params,
+    z0: jax.Array,
+    bm: BrownianPath,
+    t0: float,
+    t1: float,
+    *,
+    solver: str = "reversible_heun",
+    rtol: float = 1e-3,
+    atol: float = 1e-6,
+    max_steps: int = 4096,
+    dt0: Optional[float] = None,
+    noise: str = "diagonal",
+):
+    """Adaptive solve returning ``(z_T, AdaptiveStats)``.
+
+    The diagnostics-bearing sibling of ``solve(..., adaptive=True)``:
+    benchmarks read NFE and the accepted grid off the stats.  Forward
+    simulation only — for gradients call :func:`solve` with
+    ``gradient_mode="reversible_adjoint"`` (the stats buffers live inside
+    the exact adjoint's residuals there).
+    """
+    spec = get_solver(solver)
+    _validate(spec, "discretise", noise, False, False, adaptive=True)
+    _check_adaptive_bm(bm)
+    if dt0 is None:
+        dt0 = (t1 - t0) / 16
+    carry, stats = _adaptive_loop(spec, drift, diffusion, params, z0, bm,
+                                  t0, t1, rtol, atol, max_steps, dt0, noise)
+    z = carry.z if spec.stepper is reversible_heun_step else carry
+    return z, stats
 
 
 def solve(
@@ -230,6 +450,11 @@ def solve(
     noise: str = "diagonal",
     save_trajectory: bool = True,
     use_pallas_kernels: bool = False,
+    adaptive: bool = False,
+    rtol: Optional[float] = None,
+    atol: Optional[float] = None,
+    max_steps: Optional[int] = None,
+    dt0: Optional[float] = None,
 ):
     """Solve ``dZ = μ_θ dt + σ_θ ∘ dW`` on ``[t0, t1]`` in ``num_steps`` steps.
 
@@ -255,17 +480,73 @@ def solve(
         noise: "diagonal" or "general".
         save_trajectory: return the full ``(num_steps+1, *z0.shape)``
             trajectory (index 0 is ``z0``) instead of the terminal value.
-            Must be ``False`` for "continuous_adjoint".
+            Must be ``False`` for "continuous_adjoint" and for adaptive
+            mode (the accepted grid is non-uniform).
         use_pallas_kernels: fuse the reversible-Heun state updates through
             the Pallas kernels (diagonal noise; forbidden with
-            "discretise" — the fused ops are not AD-traceable).
+            "discretise" — the fused ops are not AD-traceable — and with
+            adaptive mode, whose dt is traced).
+        adaptive: embedded-error-controlled stepping (DESIGN.md §10)
+            instead of the fixed ``num_steps`` grid.  ``num_steps`` then
+            only seeds the initial step ``dt0 = (t1-t0)/num_steps`` and the
+            default budget ``max_steps``.  Requires a solver with an
+            embedded pair (every registered solver except euler_maruyama)
+            and a ``bm`` with arbitrary-interval ``evaluate``.  Gradients:
+            ``"reversible_adjoint"`` replays the accepted grid exactly;
+            ``"discretise"`` is forward-only (``lax.while_loop`` has no
+            reverse-mode rule); ``"continuous_adjoint"`` is rejected.
+        rtol, atol: accept tolerance (defaults 1e-3 / 1e-6) — a step is
+            accepted when the RMS of ``err / (atol + rtol * max(|z|,
+            |z'|))`` is <= 1.  May be traced scalars (e.g. a per-request
+            tolerance in serving).  Passing either without
+            ``adaptive=True`` is an error — a fixed-grid solve would
+            silently ignore the requested tolerance.
+        max_steps: accepted-step budget (also bounds rejections); the
+            backward replay buffers are ``(max_steps,)`` scalars.
+            Defaults to ``max(4 * num_steps, 256)``.  A budget-exhausted
+            solve returns **NaN** (its state sits at ``t_final < t1``,
+            which must not pass silently as ``z_T``) — raise ``max_steps``
+            or loosen the tolerance, or use :func:`solve_adaptive` to
+            observe ``stats.converged`` gracefully.
+        dt0: initial step size; defaults to ``(t1 - t0) / num_steps``.
 
     Returns:
         Trajectory or terminal value, differentiable w.r.t. ``params`` and
         ``z0`` according to ``gradient_mode``.
     """
     spec = get_solver(solver)
-    _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory)
+    _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory,
+              adaptive)
+    if not adaptive and any(
+            v is not None for v in (rtol, atol, max_steps, dt0)):
+        raise ValueError(
+            "rtol/atol/max_steps/dt0 are adaptive-mode options but "
+            "adaptive=False — pass adaptive=True (a fixed-grid solve would "
+            "silently ignore the requested tolerance)")
+
+    if adaptive:
+        _check_adaptive_bm(bm)
+        rtol = 1e-3 if rtol is None else rtol
+        atol = 1e-6 if atol is None else atol
+        if max_steps is None:
+            max_steps = max(4 * num_steps, 256)
+        if dt0 is None:
+            dt0 = (t1 - t0) / num_steps
+        if gradient_mode == "reversible_adjoint":
+            z, converged = reversible_heun_solve_adaptive(
+                drift, diffusion, params, z0, bm, rtol, atol,
+                t0, t1, max_steps, dt0, noise)
+        else:
+            carry, stats = _adaptive_loop(
+                spec, drift, diffusion, params, z0, bm, t0, t1, rtol, atol,
+                max_steps, dt0, noise)
+            z = carry.z if spec.stepper is reversible_heun_step else carry
+            converged = stats.converged
+        # a budget-exhausted solve sits at t_final < t1 — poison it rather
+        # than hand back a truncated-horizon state as z_T (select-based, so
+        # converged solves keep their gradient untouched); callers wanting
+        # graceful access go through solve_adaptive's stats
+        return jnp.where(converged, z, jnp.asarray(jnp.nan, z.dtype))
 
     if gradient_mode == "reversible_adjoint":
         if save_trajectory:
@@ -313,8 +594,12 @@ def solve_batched(
         w_dim: Brownian dimension for general noise (defaults to the
             trailing state dim, i.e. diagonal layout).
         **kwargs: forwarded to :func:`solve` (solver / gradient_mode /
-            noise / save_trajectory / use_pallas_kernels); validated once
-            before vmapping so errors surface eagerly.
+            noise / save_trajectory / use_pallas_kernels / adaptive /
+            rtol / atol / max_steps / dt0); validated once before vmapping
+            so errors surface eagerly.  With ``adaptive=True`` every
+            trajectory runs its own controller (per-trajectory accepted
+            grids — the batched while_loop runs until the slowest lane
+            finishes).
 
     Returns:
         ``(B, num_steps+1, *state_shape)`` trajectories (or ``(B, *state)``
@@ -329,7 +614,8 @@ def solve_batched(
               kwargs.get("gradient_mode", "discretise"),
               kwargs.get("noise", "diagonal"),
               kwargs.get("use_pallas_kernels", False),
-              kwargs.get("save_trajectory", True))
+              kwargs.get("save_trajectory", True),
+              kwargs.get("adaptive", False))
 
     state_shape = z0.shape[1:]
     if kwargs.get("noise", "diagonal") == "general":

@@ -167,23 +167,70 @@ def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusi
     return RevHeunState(z, zh, mu, sigma)
 
 
+# -----------------------------------------------------------------------------
+# Embedded error estimates (adaptive stepping; DESIGN.md §10)
+# -----------------------------------------------------------------------------
+#
+# Uniform interface: ``(carry, t, dt, dw, drift, diffusion, params, noise)
+# -> (carry_new, err)`` where ``err`` is an elementwise local-error estimate
+# with the shape of ``z``.  None of these cost extra vector-field
+# evaluations over the plain stepper:
+#
+# * reversible Heun: the gap ``z − ẑ`` between the two carried tracks is
+#   *free* — but it alternates sign and persists across steps
+#   (δ_{n+1} = −δ_n + ½Δμ·dt + ½Δσ·dW), so the raw gap measures the
+#   accumulated track distance, not this step's error.  The *increment*
+#   of the gap, ``δ_{n+1} + δ_n = ½(μ(ẑ₁)−μ(ẑ₀))dt + ½(σ(ẑ₁)−σ(ẑ₀))dW``,
+#   is the genuine local quantity (→ 0 as dt → 0) and costs nothing;
+# * heun: the Euler predictor ``z + μ₀dt + σ₀dW`` is the embedded
+#   lower-order solution; the corrector − predictor gap estimates the
+#   error;
+# * midpoint: same Euler pair, reusing the two evaluations the step
+#   already makes.
+#
+# euler_maruyama has no second solution to compare against — it carries no
+# embedded pair and the front-end rejects ``adaptive=True`` for it eagerly.
+
+
+def reversible_heun_embedded_step(state: RevHeunState, t, dt, dw, drift, diffusion,
+                                  params, noise):
+    new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise)
+    return new, (new.z - new.zh) + (state.z - state.zh)
+
+
+def _heun_embedded_step(z, t, dt, dw, drift, diffusion, params, noise):
+    mu0 = drift(params, t, z)
+    s0 = diffusion(params, t, z)
+    zp = z + mu0 * dt + apply_diffusion(s0, dw, noise)  # Euler (embedded)
+    mu1 = drift(params, t + dt, zp)
+    s1 = diffusion(params, t + dt, zp)
+    z1 = z + 0.5 * (mu0 + mu1) * dt + apply_diffusion(0.5 * (s0 + s1), dw, noise)
+    return z1, z1 - zp
+
+
+def _midpoint_embedded_step(z, t, dt, dw, drift, diffusion, params, noise):
+    mu0 = drift(params, t, z)
+    s0 = diffusion(params, t, z)
+    euler = mu0 * dt + apply_diffusion(s0, dw, noise)
+    half = z + 0.5 * euler
+    tm = t + 0.5 * dt
+    z1 = z + drift(params, tm, half) * dt + apply_diffusion(
+        diffusion(params, tm, half), dw, noise)
+    return z1, z1 - (z + euler)
+
+
 def _euler_maruyama_step(z, t, dt, dw, drift, diffusion, params, noise):
     return z + drift(params, t, z) * dt + apply_diffusion(diffusion(params, t, z), dw, noise)
 
 
 def _midpoint_step(z, t, dt, dw, drift, diffusion, params, noise):
-    half = z + 0.5 * (drift(params, t, z) * dt + apply_diffusion(diffusion(params, t, z), dw, noise))
-    tm = t + 0.5 * dt
-    return z + drift(params, tm, half) * dt + apply_diffusion(diffusion(params, tm, half), dw, noise)
+    # the fixed-grid stepper IS the embedded pair minus the error output
+    # (XLA dead-code-eliminates the unused estimate) — one scheme, not two
+    return _midpoint_embedded_step(z, t, dt, dw, drift, diffusion, params, noise)[0]
 
 
 def _heun_step(z, t, dt, dw, drift, diffusion, params, noise):
-    mu0 = drift(params, t, z)
-    s0 = diffusion(params, t, z)
-    zp = z + mu0 * dt + apply_diffusion(s0, dw, noise)
-    mu1 = drift(params, t + dt, zp)
-    s1 = diffusion(params, t + dt, zp)
-    return z + 0.5 * (mu0 + mu1) * dt + apply_diffusion(0.5 * (s0 + s1), dw, noise)
+    return _heun_embedded_step(z, t, dt, dw, drift, diffusion, params, noise)[0]
 
 
 def sde_solve(

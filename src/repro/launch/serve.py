@@ -126,17 +126,31 @@ def restore_for_serving(workload: str, ckpt_dir: str):
 
 @dataclasses.dataclass
 class Request:
-    """One client ask: ``size`` trajectories keyed off ``seed``."""
+    """One client ask: ``size`` trajectories keyed off ``seed``.
+
+    ``rtol`` is only consumed by the adaptive terminal-sampling mode
+    (``--adaptive``): the accuracy the client requests for its samples.
+    """
 
     rid: int
     size: int
     seed: int
+    rtol: float = 1e-3
 
 
-def synthetic_requests(n: int, max_size: int, seed: int):
-    """Deterministic request stream (sizes cycle 1..max_size, seeds unique)."""
+#: Tolerances the synthetic adaptive request stream cycles through — all
+#: served by the SAME compiled program per bucket (rtol is traced).
+_SYNTH_RTOLS = (1e-2, 3e-3, 1e-3, 3e-4)
+
+
+def synthetic_requests(n: int, max_size: int, seed: int,
+                       adaptive: bool = False):
+    """Deterministic request stream (sizes cycle 1..max_size, seeds unique;
+    with ``adaptive`` the per-request tolerance cycles :data:`_SYNTH_RTOLS`)."""
     return collections.deque(
-        Request(rid=i, size=1 + (i * 7 + seed) % max_size, seed=seed * 100_003 + i)
+        Request(rid=i, size=1 + (i * 7 + seed) % max_size,
+                seed=seed * 100_003 + i,
+                rtol=_SYNTH_RTOLS[i % len(_SYNTH_RTOLS)] if adaptive else 1e-3)
         for i in range(n))
 
 
@@ -188,7 +202,8 @@ def _percentile(xs, q: float) -> float:
 def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
               max_batch: int, requests: int, request_max: int,
               latent_mode: str = "prior", obs_len: int = 9,
-              stream_chunks: int = 0, seed: int = 0, args=None) -> dict:
+              stream_chunks: int = 0, adaptive: bool = False,
+              atol: float = 1e-6, seed: int = 0, args=None) -> dict:
     """Run the trajectory-sampling service; returns the stats dict it prints.
 
     With ``--smoke`` and no ``--ckpt-dir``, a fresh-initialised model is
@@ -197,6 +212,16 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
     """
     if workload not in SERVE_WORKLOADS:
         raise ValueError(f"serve_sde serves {SERVE_WORKLOADS}, got {workload!r}")
+    if adaptive and workload != "sde-gan":
+        raise ValueError(
+            "--adaptive serves terminal samples from the SDE-GAN generator; "
+            "the latent-sde decoders serve whole trajectories, which have no "
+            "fixed output grid under adaptive stepping")
+    if adaptive and stream_chunks > 1:
+        raise ValueError(
+            "--adaptive and --stream-chunks are mutually exclusive: "
+            "streaming emits a fixed per-chunk grid, adaptive solving "
+            "chooses its own")
     if requests < 1 or request_max < 1:
         raise ValueError(
             f"--requests ({requests}) and --request-max ({request_max}) "
@@ -232,7 +257,10 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
     with mesh_ctx:
         if mesh is not None:
             print(f"[serve] data-parallel over {n_dev} devices", flush=True)
-        if stream_chunks > 1:
+        if adaptive:
+            _adaptive_terminal_loop(cfg, params, buckets, requests,
+                                    request_max, atol, seed, stats)
+        elif stream_chunks > 1:
             _stream_loop(workload, cfg, params, buckets, requests,
                          request_max, stream_chunks, seed, stats)
         else:
@@ -241,15 +269,20 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
     return stats
 
 
-def _compile_pool(sampler, params, buckets):
-    """AOT-compile the sampler once per bucket shape."""
+def _compile_pool(sampler, params, buckets, *example_args, tag: str = ""):
+    """AOT-compile the sampler once per bucket shape.
+
+    ``example_args``: extra example operands after ``(params, keys)`` —
+    e.g. the adaptive loop's traced-rtol scalar (shape, not value, is what
+    the compile caches on).
+    """
     jitted = jax.jit(sampler)
     pool = {}
     for b in buckets:
         keys = jax.random.split(jax.random.PRNGKey(0), b)
         t0 = time.perf_counter()
-        pool[b] = jitted.lower(params, keys).compile()
-        print(f"[serve] compiled bucket {b} in "
+        pool[b] = jitted.lower(params, keys, *example_args).compile()
+        print(f"[serve] compiled {tag}bucket {b} in "
               f"{time.perf_counter() - t0:.2f}s", flush=True)
     return pool
 
@@ -299,6 +332,56 @@ def _batch_loop(workload, cfg, params, buckets, requests, request_max,
     _report(f"{workload}" + (f"/{latent_mode}" if workload == "latent-sde"
                              else ""),
             stats, total_rows, n_batches, latencies, wall)
+
+
+def _adaptive_terminal_loop(cfg, params, buckets, requests, request_max,
+                            atol, seed, stats):
+    """Per-request-tolerance terminal sampling (DESIGN.md §10).
+
+    One compiled program per bucket serves EVERY tolerance — ``rtol`` is a
+    traced scalar argument of the sampler, so tolerance never enters the
+    AOT cache key.  A coalesced batch runs at the tightest tolerance of its
+    requests (over-delivering for the looser ones, never the reverse).
+    """
+    from .steps import make_adaptive_terminal_step
+
+    pool = _compile_pool(make_adaptive_terminal_step(cfg, atol=atol), params,
+                         buckets, jnp.asarray(1e-3, cfg.dtype),
+                         tag="adaptive ")
+
+    pending = synthetic_requests(requests, request_max, seed, adaptive=True)
+    latencies, total_rows, n_batches, non_converged = [], 0, 0, 0
+    rtols_served = set()
+    t_start = time.perf_counter()
+    while pending:
+        batch, rows = _coalesce(pending, buckets[-1])
+        bucket = next(b for b in buckets if b >= rows)
+        keys = _request_keys(batch, bucket)
+        batch_rtol = min(r.rtol for r in batch)  # tightest ask wins
+        rtols_served.update(r.rtol for r in batch)
+        ys, conv = pool[bucket](params, keys,
+                                jnp.asarray(batch_rtol, cfg.dtype))
+        jax.block_until_ready(ys)
+        # padding rows don't count; a real non-converged row is a sample at
+        # t_final < t1, not Y_T — report it, never ship it silently
+        non_converged += int(jnp.sum(~conv[:rows]))
+        t_now = time.perf_counter()
+        latencies += [t_now - t_start] * len(batch)
+        total_rows += rows
+        n_batches += 1
+    wall = time.perf_counter() - t_start
+    _report("sde-gan/adaptive", stats, total_rows, n_batches, latencies, wall)
+    stats["rtols_served"] = sorted(rtols_served)
+    stats["compiled_programs"] = len(pool)
+    stats["non_converged"] = non_converged
+    print(f"[serve] adaptive: {len(rtols_served)} distinct tolerances "
+          f"served by {len(pool)} compiled program(s) "
+          f"(rtol is traced — no recompiles)", flush=True)
+    if non_converged:
+        print(f"[serve] WARNING: {non_converged}/{total_rows} rows exhausted "
+              f"the adaptive step budget before t1 (served state is at "
+              f"t_final < t1) — raise max_steps or loosen the tolerance",
+              flush=True)
 
 
 def _stream_loop(workload, cfg, params, buckets, requests, request_max,
@@ -458,6 +541,12 @@ def main(argv=None):
     ap.add_argument("--stream-chunks", type=int, default=0,
                     help="sde-gan: stream the horizon in K time chunks "
                          "(0/1 = whole trajectories)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="sde-gan: serve adaptive terminal samples at each "
+                         "request's tolerance (rtol is traced — one "
+                         "compiled program per bucket serves every rtol)")
+    ap.add_argument("--atol", type=float, default=1e-6,
+                    help="adaptive serving: absolute tolerance floor")
     ap.add_argument("--solver", default="reversible_heun",
                     help="fresh-init (--smoke) solver; restored bundles "
                          "carry their own")
@@ -485,8 +574,9 @@ def main(argv=None):
     return serve_sde(args.workload, args.ckpt_dir, args.smoke,
                      args.max_batch, args.requests, args.request_max,
                      latent_mode=args.latent_mode, obs_len=args.obs_len,
-                     stream_chunks=args.stream_chunks, seed=args.seed,
-                     args=args)
+                     stream_chunks=args.stream_chunks,
+                     adaptive=args.adaptive, atol=args.atol,
+                     seed=args.seed, args=args)
 
 
 if __name__ == "__main__":

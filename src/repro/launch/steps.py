@@ -349,6 +349,46 @@ def make_sample_step(workload: str, cfg, latent_mode: str = "prior",
     return sample
 
 
+def make_adaptive_terminal_step(cfg, atol: float = 1e-6,
+                                max_steps: int = 4096):
+    """Build the adaptive terminal-distribution sampler for one serving
+    bucket: ``(params, keys, rtol) -> ((len(keys), data_dim) samples,
+    (len(keys),) converged)``.
+
+    The per-request tolerance surface (DESIGN.md §10): ``rtol`` is a
+    *traced* scalar, so launch/serve.py AOT-compiles ONE program per bucket
+    and every tolerance a client asks for runs through it — the adaptive
+    ``lax.while_loop`` simply takes more (or fewer) steps.  A coalesced
+    batch serves the tightest tolerance among its requests, which
+    over-delivers for the rest (never under-delivers).  Rows whose
+    controller exhausted its step budget come back ``converged=False`` —
+    the serving loop reports them instead of passing them off as ``Y_T``.
+    ``max_steps`` defaults to a production-sized 4096 (forward-only — no
+    O(max_steps) adjoint buffers ride along here, and the while_loop only
+    pays for iterations actually taken), so tight client tolerances don't
+    starve at the library default budget.
+
+    SDE-GAN generator only — it is the terminal-value workload; the
+    trajectory-serving samplers keep their fixed grids (an adaptive solve
+    has no fixed output grid to return).
+    """
+    from ..core import sde as S
+    from ..core.solve import SOLVERS, get_solver
+
+    spec = get_solver(cfg.solver)
+    if spec.embedded_stepper is None:
+        raise ValueError(
+            f"--adaptive needs a solver with an embedded error estimate; "
+            f"{cfg.solver!r} has none (embedded pairs: "
+            f"{sorted(s.name for s in SOLVERS.values() if s.embedded_stepper)})")
+
+    def sample(params, keys, rtol):
+        return S.generator_sample_terminal(params, cfg, keys, rtol, atol,
+                                           max_steps=max_steps)
+
+    return sample
+
+
 def make_stream_chunk_step(cfg, span: float, num_steps: int):
     """Build the streamed-rollout chunk step for long-horizon serving:
     ``(params, keys, x0, t_start) -> (ys_chunk, xT)``.

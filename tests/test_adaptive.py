@@ -1,0 +1,400 @@
+"""Adaptive stepping tests (DESIGN.md §10).
+
+Four pillars:
+
+* **eager validation** — every solver × adaptive × gradient-mode /
+  trajectory / fusion combination that cannot work raises a named
+  ValueError before any tracing;
+* **strong-error regression** — on a *shared* ``DenseBrownianPath``,
+  adaptive at tight tolerance beats the uniform grid of equal cost
+  (same NFE budget) on the burst problem;
+* **replay** — the accepted-step sequence replays bitwise (a plain scan
+  over the stored ``(ts, dts)`` reproduces the adaptive terminal state
+  exactly), the run is deterministic, and the exact adjoint's gradient
+  matches plain AD through the frozen-grid replay to float64 round-off;
+* **pathwise consistency** — ``BrownianPath.evaluate`` across a
+  rejected-then-halved step: the increment of the full step equals the sum
+  of the two half-step increments (the rejected attempt and its retry see
+  the SAME underlying path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core.brownian import BrownianPath, DenseBrownianPath
+from repro.core.solve import solve, solve_adaptive
+from repro.core.solvers import RevHeunState, reversible_heun_step, sde_solve
+
+# the time-localised stiffness burst (benchmarks/convergence.py §Frontier)
+_A, _AMP, _C, _W, _SIGMA = 0.5, 30.0, 0.5, 0.05, 0.05
+
+
+def _burst(p, t, y):
+    theta = _A + _AMP * jnp.exp(-(((t - _C) / _W) ** 2))
+    return theta * (1.0 - y) + (0.0 if p is None else p["shift"])
+
+
+def _burst_diffusion(p, t, y):
+    return _SIGMA * jnp.ones_like(y)
+
+
+def _ou():
+    params = {"theta": jnp.float32(1.2), "mu": jnp.float32(0.5),
+              "sigma": jnp.float32(0.3)}
+    drift = lambda p, t, x: p["theta"] * (p["mu"] - x)
+    diffusion = lambda p, t, x: p["sigma"] * jnp.ones_like(x)
+    return params, drift, diffusion
+
+
+# -----------------------------------------------------------------------------
+# eager validation
+# -----------------------------------------------------------------------------
+
+
+def test_adaptive_rejects_solver_without_embedded_pair(key):
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 3))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 3))
+    with pytest.raises(ValueError, match="embedded error estimate"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
+              solver="euler_maruyama", save_trajectory=False, adaptive=True)
+
+
+def test_adaptive_rejects_save_trajectory(key):
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 3))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 3))
+    with pytest.raises(ValueError, match="save_trajectory"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8, adaptive=True)
+
+
+def test_adaptive_rejects_continuous_adjoint(key):
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 3))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 3))
+    with pytest.raises(ValueError, match="continuous_adjoint"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
+              solver="midpoint", gradient_mode="continuous_adjoint",
+              save_trajectory=False, adaptive=True)
+
+
+def test_adaptive_rejects_pallas_fusion(key):
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 3))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 3))
+    with pytest.raises(ValueError, match="static dt"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
+              solver="reversible_heun", gradient_mode="reversible_adjoint",
+              save_trajectory=False, adaptive=True, use_pallas_kernels=True)
+
+
+def test_tolerance_options_require_adaptive(key):
+    """rtol/atol/max_steps/dt0 without adaptive=True would be silently
+    ignored by a fixed-grid solve — rejected eagerly instead."""
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 3))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 3))
+    with pytest.raises(ValueError, match="adaptive=True"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8, rtol=1e-6)
+    with pytest.raises(ValueError, match="adaptive=True"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8, max_steps=64)
+
+
+def test_adaptive_rejects_bm_without_evaluate(key):
+    """A fixed-grid-only path (DenseBrownianPath predates evaluate; use a
+    stub) is rejected by name, not by an AttributeError mid-trace."""
+
+    class GridOnly:
+        def increment(self, n, num_steps):
+            return jnp.zeros(())
+
+    params, drift, diffusion = _ou()
+    with pytest.raises(ValueError, match="evaluate"):
+        solve(drift, diffusion, params, jnp.ones((2,)), GridOnly(),
+              0.0, 1.0, 8, save_trajectory=False, adaptive=True)
+
+
+# -----------------------------------------------------------------------------
+# correctness: strong error at equal cost, on a SHARED dense path
+# -----------------------------------------------------------------------------
+
+
+def test_adaptive_beats_equal_cost_uniform_grid(key):
+    """On the burst problem, adaptive at tight tolerance reaches a lower
+    strong error than the uniform grid spending the SAME number of
+    vector-field evaluations — pathwise (shared DenseBrownianPath)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        n_paths, fine = 32, 2048
+        y0 = jnp.zeros((n_paths, 1), jnp.float64)
+        bm = DenseBrownianPath.sample(key, 0.0, 1.0, fine, (n_paths, 1),
+                                      jnp.float64)
+        ref = sde_solve(_burst, _burst_diffusion, None, y0, bm, 0.0, 1.0,
+                        fine, solver="heun", save_trajectory=False)
+
+        def one(wi, y0i):
+            bmi = DenseBrownianPath(wi, 0.0, 1.0)
+            z, st = solve_adaptive(_burst, _burst_diffusion, None, y0i, bmi,
+                                   0.0, 1.0, solver="reversible_heun",
+                                   rtol=2e-3, atol=1e-5, max_steps=1024,
+                                   dt0=1.0 / 16)
+            return z, st.nfe, st.converged
+
+        zT, nfe, conv = jax.vmap(one)(jnp.moveaxis(bm.w, 1, 0), y0)
+        assert bool(jnp.all(conv))
+        adaptive_err = float(jnp.mean(jnp.abs(zT - ref)))
+        # uniform grid with AT LEAST equal cost: round the adaptive NFE up
+        # to the next power of two (a divisor of the fine grid), so the
+        # fixed baseline spends >= the adaptive budget — a strictly harder
+        # bar than exactly-equal cost
+        mean_nfe = float(jnp.mean(nfe))
+        equal_steps = 1
+        while equal_steps < mean_nfe - 1:
+            equal_steps *= 2
+        zT_fix = sde_solve(_burst, _burst_diffusion, None, y0, bm, 0.0, 1.0,
+                           equal_steps, solver="reversible_heun",
+                           save_trajectory=False)
+        uniform_err = float(jnp.mean(jnp.abs(zT_fix - ref)))
+        assert adaptive_err < uniform_err, (
+            f"adaptive ({adaptive_err:.2e}, ~{mean_nfe:.0f} NFE) must beat "
+            f"the >= equal-cost uniform grid ({uniform_err:.2e}, "
+            f"{equal_steps + 1} NFE)")
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+# -----------------------------------------------------------------------------
+# replay: bitwise accepted-step sequence, exact adjoint == frozen-grid AD
+# -----------------------------------------------------------------------------
+
+
+def _adaptive_setup(key):
+    p0 = {"shift": jnp.float64(0.0)}
+    z0 = jnp.zeros((3,), jnp.float64)
+    bm = BrownianPath(key, 0.0, 1.0, (3,), jnp.float64)
+    kw = dict(rtol=1e-3, atol=1e-6, max_steps=512, dt0=1.0 / 16)
+    return p0, z0, bm, kw
+
+
+def test_accepted_sequence_replays_bitwise_and_deterministically(key):
+    jax.config.update("jax_enable_x64", True)
+    try:
+        p0, z0, bm, kw = _adaptive_setup(key)
+        zT, st = solve_adaptive(_burst, _burst_diffusion, p0, z0, bm,
+                                0.0, 1.0, solver="reversible_heun", **kw)
+        zT2, st2 = solve_adaptive(_burst, _burst_diffusion, p0, z0, bm,
+                                  0.0, 1.0, solver="reversible_heun", **kw)
+        # determinism: two runs agree bitwise, grid included
+        np.testing.assert_array_equal(np.asarray(zT), np.asarray(zT2))
+        np.testing.assert_array_equal(np.asarray(st.ts), np.asarray(st2.ts))
+        np.testing.assert_array_equal(np.asarray(st.dts), np.asarray(st2.dts))
+        assert int(st.num_accepted) == int(st2.num_accepted)
+        assert bool(st.converged) and int(st.num_rejected) >= 0
+
+        # a plain scan over the stored grid reproduces z_T bitwise — the
+        # replay contract the exact adjoint's backward pass relies on
+        n = int(st.num_accepted)
+        s0 = RevHeunState(z0, z0, _burst(p0, 0.0, z0),
+                          _burst_diffusion(p0, 0.0, z0))
+
+        def body(s, i):
+            dw = bm.evaluate(st.ts[i], st.ts[i] + st.dts[i]).astype(z0.dtype)
+            return reversible_heun_step(s, st.ts[i], st.dts[i], dw, _burst,
+                                        _burst_diffusion, p0, "diagonal"), None
+
+        fin, _ = lax.scan(body, s0, jnp.arange(n))
+        np.testing.assert_array_equal(np.asarray(fin.z), np.asarray(zT))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_adaptive_exact_adjoint_matches_frozen_grid_ad(key):
+    """Gradient of the adaptive solve (exact adjoint, O(max_steps)-scalar
+    residuals) == plain AD through a scan over the frozen accepted grid,
+    to float64 round-off."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        p0, z0, bm, kw = _adaptive_setup(key)
+        _, st = solve_adaptive(_burst, _burst_diffusion, p0, z0, bm,
+                               0.0, 1.0, solver="reversible_heun", **kw)
+        n = int(st.num_accepted)
+
+        g_adj = jax.grad(lambda p: jnp.sum(solve(
+            _burst, _burst_diffusion, p, z0, bm, 0.0, 1.0, 16,
+            solver="reversible_heun", gradient_mode="reversible_adjoint",
+            save_trajectory=False, adaptive=True, **kw) ** 2))(p0)
+
+        def frozen(p):
+            s0 = RevHeunState(z0, z0, _burst(p, 0.0, z0),
+                              _burst_diffusion(p, 0.0, z0))
+
+            def body(s, i):
+                dw = bm.evaluate(st.ts[i],
+                                 st.ts[i] + st.dts[i]).astype(z0.dtype)
+                return reversible_heun_step(
+                    s, st.ts[i], st.dts[i], dw, _burst, _burst_diffusion,
+                    p, "diagonal"), None
+
+            fin, _ = lax.scan(body, s0, jnp.arange(n))
+            return jnp.sum(fin.z ** 2)
+
+        g_frozen = jax.grad(frozen)(p0)
+        np.testing.assert_allclose(float(g_adj["shift"]),
+                                   float(g_frozen["shift"]),
+                                   rtol=1e-10, atol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_adaptive_gradient_under_jit_and_traced_tolerance(key):
+    """The adjoint composes with jit, and rtol may be a *traced* scalar
+    (the per-request-tolerance serving surface) — one compiled program,
+    many tolerances, tighter tolerance => more accepted steps."""
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((4,), jnp.float32)
+    bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float32)
+
+    @jax.jit
+    def g(p, rtol):
+        return jax.grad(lambda q: jnp.sum(solve(
+            drift, diffusion, q, z0, bm, 0.0, 1.0, 16,
+            solver="reversible_heun", gradient_mode="reversible_adjoint",
+            save_trajectory=False, adaptive=True, rtol=rtol, atol=1e-6,
+            max_steps=1024) ** 2))(p)
+
+    for rtol in (1e-2, 1e-3):
+        out = g(params, jnp.float32(rtol))
+        assert all(bool(jnp.all(jnp.isfinite(v)))
+                   for v in jax.tree.leaves(out))
+
+    @jax.jit
+    def steps_at(rtol):
+        _, st = solve_adaptive(drift, diffusion, params, z0, bm, 0.0, 1.0,
+                               solver="reversible_heun", rtol=rtol,
+                               atol=1e-7, max_steps=2048)
+        return st.num_accepted
+
+    assert int(steps_at(jnp.float32(1e-4))) > int(steps_at(jnp.float32(1e-2)))
+
+
+@pytest.mark.parametrize("solver", ["heun", "midpoint"])
+def test_heun_midpoint_adaptive_forward(key, solver):
+    """The Heun/Euler and midpoint/Euler embedded pairs qualify both
+    two-evaluation solvers for adaptive forward solving; their terminal
+    values agree with a fine fixed-grid reference at tolerance level."""
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((4,), jnp.float32)
+    bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float32)
+    zT, st = solve_adaptive(drift, diffusion, params, z0, bm, 0.0, 1.0,
+                            solver=solver, rtol=1e-4, atol=1e-6,
+                            max_steps=4096)
+    assert bool(st.converged)
+    zT_ref, st_ref = solve_adaptive(drift, diffusion, params, z0, bm,
+                                    0.0, 1.0, solver=solver, rtol=1e-5,
+                                    atol=1e-7, max_steps=4096)
+    assert bool(st_ref.converged)
+    np.testing.assert_allclose(np.asarray(zT), np.asarray(zT_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_budget_exhaustion_is_loud(key):
+    """A budget-exhausted adaptive solve sits at t_final < t1: solve()
+    NaN-poisons it (both gradient modes) instead of passing it off as
+    z_T; solve_adaptive reports it gracefully via stats.converged."""
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((4,), jnp.float32)
+    bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float32)
+    tight = dict(rtol=1e-6, atol=1e-8, max_steps=8)
+
+    zT, st = solve_adaptive(drift, diffusion, params, z0, bm, 0.0, 1.0,
+                            solver="reversible_heun", **tight)
+    assert not bool(st.converged) and float(st.t_final) < 1.0
+    assert bool(jnp.all(jnp.isfinite(zT)))  # graceful: raw state + stats
+
+    for mode in ("discretise", "reversible_adjoint"):
+        out = solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 16,
+                    solver="reversible_heun", gradient_mode=mode,
+                    save_trajectory=False, adaptive=True, **tight)
+        assert bool(jnp.all(jnp.isnan(out))), mode  # loud
+
+    # and a CONVERGED solve is untouched by the poisoning select
+    ok = solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 16,
+               solver="reversible_heun", gradient_mode="reversible_adjoint",
+               save_trajectory=False, adaptive=True, rtol=1e-2, atol=1e-4,
+               max_steps=1024)
+    assert bool(jnp.all(jnp.isfinite(ok)))
+
+
+# -----------------------------------------------------------------------------
+# pathwise consistency across rejection
+# -----------------------------------------------------------------------------
+
+
+def test_evaluate_consistent_across_rejected_then_halved_step(key):
+    """The rejection contract: when the controller rejects ``[t, t+dt)``
+    and retries ``[t, t+dt/2)`` + ``[t+dt/2, t+dt)``, all three queries
+    come from the SAME underlying path — the full-step increment equals
+    the sum of the halves (and value/evaluate agree bitwise)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        bm = BrownianPath(key, 0.0, 1.0, (5,), jnp.float64)
+        # controller-shaped points: non-dyadic t, then a halved retry
+        for t, dt in ((0.137, 0.25), (0.5, 0.113), (0.93, 0.07)):
+            full = np.asarray(bm.evaluate(t, t + dt))
+            half1 = np.asarray(bm.evaluate(t, t + dt / 2))
+            half2 = np.asarray(bm.evaluate(t + dt / 2, t + dt))
+            np.testing.assert_allclose(half1 + half2, full, atol=1e-12)
+            # the driver's value-carry form is bitwise the evaluate form
+            np.testing.assert_array_equal(
+                np.asarray(bm.value(t + dt) - bm.value(t)), full)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_dense_path_evaluate_matches_increment_sums(key):
+    """DenseBrownianPath.evaluate is pathwise-consistent with the fixed
+    grids: at fine-node times it telescopes the SAME fine increments the
+    uniform solves consume, and it is exactly additive in between."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        fine = 64
+        bm = DenseBrownianPath.sample(key, 0.0, 1.0, fine, (3,), jnp.float64)
+        # fine-node queries == increment sums
+        for i, j in ((0, 8), (8, 24), (17, 61)):
+            via_eval = np.asarray(bm.evaluate(i / fine, j / fine))
+            via_inc = sum(np.asarray(bm.increment(jnp.int32(k), fine))
+                          for k in range(i, j))
+            np.testing.assert_allclose(via_eval, via_inc, atol=1e-12)
+        # additivity at non-node points (the linear-interp region)
+        s, m, t = 0.1234, 0.37, 0.7921
+        np.testing.assert_allclose(
+            np.asarray(bm.evaluate(s, m) + bm.evaluate(m, t)),
+            np.asarray(bm.evaluate(s, t)), atol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_adaptive_on_dense_path_converges_to_reference(key):
+    """solve() adaptive mode over a DenseBrownianPath lands on the fine
+    reference as the tolerance tightens (same sample path)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        fine = 2048
+        z0 = jnp.zeros((1,), jnp.float64)
+        bm = DenseBrownianPath.sample(key, 0.0, 1.0, fine, (1,), jnp.float64)
+        ref = sde_solve(_burst, _burst_diffusion, None, z0, bm, 0.0, 1.0,
+                        fine, solver="heun", save_trajectory=False)
+        errs = []
+        for rtol in (1e-2, 1e-4):
+            zT, st = solve_adaptive(_burst, _burst_diffusion, None, z0, bm,
+                                    0.0, 1.0, solver="reversible_heun",
+                                    rtol=rtol, atol=rtol * 1e-2,
+                                    max_steps=2048, dt0=1.0 / 16)
+            assert bool(st.converged)
+            errs.append(float(jnp.max(jnp.abs(zT - ref))))
+        assert errs[1] < errs[0], errs
+    finally:
+        jax.config.update("jax_enable_x64", False)

@@ -148,6 +148,27 @@ def test_path_evaluate_additivity(key):
     np.testing.assert_allclose(np.asarray(w1 + w2), np.asarray(w3), atol=1e-6)
 
 
+def test_path_value_evaluate_contract(key):
+    """``evaluate(s, t) == value(t) - value(s)`` bitwise, and
+    ``value(t0) == 0`` — the contract the adaptive driver's left-endpoint
+    carry relies on (DESIGN.md §10) to keep the exact adjoint's backward
+    replay bit-identical to the forward.  Pinned at float64 (the adjoint
+    replay's precision) — without x64 the requested dtype silently
+    truncates to float32."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float64)
+        assert bm.value(0.0).dtype == jnp.float64
+        np.testing.assert_array_equal(np.asarray(bm.value(0.0)),
+                                      np.zeros(4))
+        for s, t in ((0.0, 0.3), (0.21, 0.77), (0.5, 1.0), (0.137, 0.1371)):
+            np.testing.assert_array_equal(
+                np.asarray(bm.evaluate(s, t)),
+                np.asarray(bm.value(t) - bm.value(s)))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
 def test_virtual_brownian_tree_consistency(key):
     vb = VirtualBrownianTree(key, 0.0, 1.0, (4,), tol=1e-4)
     a = vb.evaluate(0.2, 0.7)

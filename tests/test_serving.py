@@ -204,3 +204,18 @@ def test_serve_cli_latent_and_stream():
     r = _run_serve_cli(["--workload", "sde-gan", "--stream-chunks", "4"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "first-chunk latency" in r.stdout
+
+
+def test_serve_cli_adaptive_per_request_tolerance():
+    """--adaptive terminal sampling: several distinct request tolerances
+    must be served by exactly one compiled program per bucket (rtol is
+    traced, never a cache key), and the latent workload is rejected by
+    name (no fixed output grid to serve)."""
+    r = _run_serve_cli(["--workload", "sde-gan", "--adaptive"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "traj/s" in r.stdout
+    assert "distinct tolerances" in r.stdout
+    assert "no recompiles" in r.stdout
+    r = _run_serve_cli(["--workload", "latent-sde", "--adaptive"])
+    assert r.returncode != 0
+    assert "terminal samples" in r.stderr

@@ -80,6 +80,17 @@ def test_every_solver_mode_combination_dispatches_or_rejects(key, solver, mode):
             run()
 
 
+def test_registry_embedded_pairs():
+    """Adaptive capability is registry data: every solver except
+    euler_maruyama carries an embedded error estimate (reversible Heun's
+    z−ẑ gap increment; Heun/midpoint's Euler pair)."""
+    for name, spec in SOLVERS.items():
+        if name == "euler_maruyama":
+            assert spec.embedded_stepper is None
+        else:
+            assert spec.embedded_stepper is not None, name
+
+
 def test_unknown_solver_and_mode_rejected(key):
     params, drift, diffusion = _ou()
     z0 = jnp.ones((2, 2))
