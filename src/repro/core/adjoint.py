@@ -23,7 +23,7 @@ bit-identical noise without storage (paper §4).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,62 @@ def _float0_zeros(tree):
     return jax.tree.map(z, tree)
 
 
+def _gen_spec(bm, z0, noise, use_pallas):
+    """``(key, dt_grid_fn)`` for in-kernel ΔW generation, or ``None``.
+
+    The fused forward scan may draw each step's increment *inside* the
+    phase-1 kernel (counter-based Threefry keyed on the step index) instead
+    of calling ``bm.increment`` — but only when the in-kernel draw is
+    bitwise what ``bm.increment(n, num_steps).astype(z.dtype)`` produces:
+    the path must be the counter-keyed :class:`BrownianPath` (not a dense
+    or tree sampler), already in the solve dtype (no conversion to mimic),
+    and shaped like the state (diagonal noise).
+    """
+    if not (use_pallas and noise == "diagonal"
+            and type(bm) is BrownianPath):
+        return None
+    if jnp.dtype(bm.dtype) != jnp.dtype(z0.dtype):
+        return None
+    if tuple(bm.shape) != tuple(z0.shape):
+        return None
+    return bm.key, lambda num_steps: (bm.t1 - bm.t0) / num_steps
+
+
+def _fused_local_vjp(drift, diffusion, params, state0, cts, t_left, dt, dw):
+    """Hand-derived VJP of one Algorithm-1 step (the fused exact adjoint).
+
+    Bitwise identical to ``jax.vjp`` of the unfused stepper (the grouping
+    every term is accumulated in is the transpose's own — DESIGN.md §3
+    derives it), with the elementwise cotangent phases running through the
+    kernels/ops.py policy: backward Pallas kernels on TPU, the jnp oracle
+    elsewhere.  One vector-field VJP per step, exactly like the unfused
+    path — only the elementwise algebra around it is fused.
+
+    ``state0`` is the step's *left* state (already reconstructed);
+    ``cts = (g_z, g_zh, g_mu, g_sigma)`` the step-``n+1`` cotangents.
+    Returns ``(dparams, (d_z, d_zh, d_mu, d_sigma))``.
+    """
+    from ..kernels import ops
+
+    g_z, g_zh, g_mu, g_sigma = cts
+    # ẑ_{n+1} recomputed from the left state — the same bits the unfused
+    # local forward produces internally (state1.zh has drifted bits after
+    # the round-trip through reconstruction).
+    zh1 = ops.rev_heun_phase1(state0.z, state0.zh, state0.mu, state0.sigma,
+                              dw, dt)
+    c_mu1, c_sig1 = ops.rev_heun_bwd_phase1(g_z, g_mu, g_sigma, dw, dt)
+    t_right = t_left + dt
+    # Returning ``x`` first makes the g_zh seed enter the ẑ₁-cotangent sum
+    # before the field contributions — the same accumulation order as the
+    # unfused transpose, keeping the identity bitwise.
+    _, vjp_fields = jax.vjp(
+        lambda p, x: (x, drift(p, t_right, x), diffusion(p, t_right, x)),
+        params, zh1)
+    dparams, ghat = vjp_fields((g_zh, c_mu1, c_sig1))
+    d_z, d_zh, d_mu, d_sigma = ops.rev_heun_bwd_phase2(g_z, ghat, dw, dt)
+    return dparams, (d_z, d_zh, d_mu, d_sigma)
+
+
 # =============================================================================
 # Reversible Heun with exact O(1)-memory adjoint
 # =============================================================================
@@ -75,11 +131,13 @@ def reversible_heun_solve(
     Losses may consume any subset of the trajectory; the backward pass
     injects each step's cotangent as it sweeps right-to-left.
 
-    ``use_pallas`` runs the forward scan and the backward's closed-form
-    state reconstruction through the fused Pallas kernels (diagonal noise
-    only).  The local per-step VJPs always use the unfused stepper — AD
-    never traces through the fused ops, so the flag composes with the exact
-    adjoint (unlike plain AD through :func:`repro.core.solvers.sde_solve`).
+    ``use_pallas`` runs the *whole* per-step pipeline fused (diagonal noise
+    only): the forward scan (with ΔW generated inside the phase-1 kernel
+    when the path allows it — see :func:`_gen_spec`), the backward's
+    closed-form state reconstruction, and the hand-derived per-step
+    cotangent phases (:func:`_fused_local_vjp`, bitwise the unfused
+    ``jax.vjp``).  AD never traces through a Pallas op — the backward
+    kernels ARE the derivative, registered through this ``custom_vjp``.
     """
     traj, _final = _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
                             use_pallas)
@@ -91,12 +149,21 @@ def _forward(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
     dt = (t1 - t0) / num_steps
     dtype = z0.dtype
     state0 = RevHeunState(z0, z0, drift(params, t0, z0), diffusion(params, t0, z0))
+    gen = _gen_spec(bm, z0, noise, use_pallas)
 
     def body(state, n):
         t = t0 + n * dt
-        dw = bm.increment(n, num_steps).astype(dtype)
-        new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
-                                   use_pallas=use_pallas)
+        if gen is not None:
+            # ΔW generated inside the fused phase-1 kernel (bitwise
+            # bm.increment(n, num_steps)); no host-side draw per step.
+            key, dt_grid_fn = gen
+            new = reversible_heun_step(state, t, dt, None, drift, diffusion,
+                                       params, noise, use_pallas=use_pallas,
+                                       gen=(key, n, dt_grid_fn(num_steps)))
+        else:
+            dw = bm.increment(n, num_steps).astype(dtype)
+            new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
+                                       use_pallas=use_pallas)
         return new, new.z
 
     final, zs = lax.scan(body, state0, jnp.arange(num_steps))
@@ -131,6 +198,8 @@ def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, use_pallas, residuals,
     # trajectory cotangent.
     carry0 = (final, (g_traj[num_steps], zeros, zeros, zeros_sig), g_params0)
 
+    fused = use_pallas and noise == "diagonal"
+
     def body(carry, n):
         state1, (g_z, g_zh, g_mu, g_sigma), g_params = carry
         t1_local = t0 + (n + 1) * dt
@@ -141,15 +210,23 @@ def _bwd_rule(drift, diffusion, t0, t1, num_steps, noise, use_pallas, residuals,
             use_pallas=use_pallas,
         )
         # ---- local forward + local backward
-        _, vjp = jax.vjp(
-            lambda p, z, zh, mu, sigma: local_forward(p, z, zh, mu, sigma, t1_local - dt, dw),
-            params,
-            state0.z,
-            state0.zh,
-            state0.mu,
-            state0.sigma,
-        )
-        dparams, d_z, d_zh, d_mu, d_sigma = vjp((g_z, g_zh, g_mu, g_sigma))
+        if fused:
+            # hand-derived transpose through the backward kernels — one
+            # field VJP, elementwise cotangent phases fused (bitwise the
+            # unfused jax.vjp below)
+            dparams, (d_z, d_zh, d_mu, d_sigma) = _fused_local_vjp(
+                drift, diffusion, params, state0,
+                (g_z, g_zh, g_mu, g_sigma), t1_local - dt, dt, dw)
+        else:
+            _, vjp = jax.vjp(
+                lambda p, z, zh, mu, sigma: local_forward(p, z, zh, mu, sigma, t1_local - dt, dw),
+                params,
+                state0.z,
+                state0.zh,
+                state0.mu,
+                state0.sigma,
+            )
+            dparams, d_z, d_zh, d_mu, d_sigma = vjp((g_z, g_zh, g_mu, g_sigma))
         g_params = jax.tree.map(jnp.add, g_params, dparams)
         # inject this step's trajectory cotangent into g_z
         d_z = d_z + g_traj[n]
@@ -201,9 +278,15 @@ def _fwd_rule_final(drift, diffusion, params, z0, bm, t0, t1, num_steps, noise, 
     dt = (t1 - t0) / num_steps
     dtype = z0.dtype
     state0 = RevHeunState(z0, z0, drift(params, t0, z0), diffusion(params, t0, z0))
+    gen = _gen_spec(bm, z0, noise, use_pallas)
 
     def body(state, n):
         t = t0 + n * dt
+        if gen is not None:
+            key, dt_grid_fn = gen
+            return reversible_heun_step(state, t, dt, None, drift, diffusion,
+                                        params, noise, use_pallas=use_pallas,
+                                        gen=(key, n, dt_grid_fn(num_steps))), None
         dw = bm.increment(n, num_steps).astype(dtype)
         return reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
                                     use_pallas=use_pallas), None
@@ -225,6 +308,8 @@ def _bwd_rule_final(drift, diffusion, t0, t1, num_steps, noise, use_pallas, resi
     zeros = jnp.zeros_like(final.z)
     carry0 = (final, (g_zT, zeros, zeros, jnp.zeros_like(final.sigma)), g_params0)
 
+    fused = use_pallas and noise == "diagonal"
+
     def body(carry, n):
         state1, cts, g_params = carry
         t1_local = t0 + (n + 1) * dt
@@ -232,10 +317,14 @@ def _bwd_rule_final(drift, diffusion, t0, t1, num_steps, noise, use_pallas, resi
         state0 = reversible_heun_reverse_step(
             state1, t1_local, dt, dw, drift, diffusion, params, noise,
             use_pallas=use_pallas)
-        _, vjp = jax.vjp(
-            lambda p, z, zh, mu, sigma: local_forward(p, z, zh, mu, sigma, t1_local - dt, dw),
-            params, state0.z, state0.zh, state0.mu, state0.sigma)
-        dparams, d_z, d_zh, d_mu, d_sigma = vjp(cts)
+        if fused:
+            dparams, (d_z, d_zh, d_mu, d_sigma) = _fused_local_vjp(
+                drift, diffusion, params, state0, cts, t1_local - dt, dt, dw)
+        else:
+            _, vjp = jax.vjp(
+                lambda p, z, zh, mu, sigma: local_forward(p, z, zh, mu, sigma, t1_local - dt, dw),
+                params, state0.z, state0.zh, state0.mu, state0.sigma)
+            dparams, d_z, d_zh, d_mu, d_sigma = vjp(cts)
         g_params = jax.tree.map(jnp.add, g_params, dparams)
         return (state0, (d_z, d_zh, d_mu, d_sigma), g_params), None
 
@@ -268,7 +357,7 @@ reversible_heun_solve_final.defvjp(_fwd_rule_final, _bwd_rule_final)
 # never enter the buffers: gradients see exactly the accepted sequence.
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 7, 8, 9, 10, 11))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 7, 8, 9, 10, 11, 12, 13))
 def reversible_heun_solve_adaptive(
     drift: Callable,
     diffusion: Callable,
@@ -282,6 +371,8 @@ def reversible_heun_solve_adaptive(
     max_steps: int,
     dt0: float,
     noise: str = "diagonal",
+    use_pallas: bool = False,
+    bridge_depth: Optional[int] = None,
 ):
     """``(z_T, converged)`` of the adaptive reversible-Heun solve; exact
     adjoint on ``z_T``.
@@ -290,32 +381,40 @@ def reversible_heun_solve_adaptive(
     budget-exhausted state at ``t_final < t1`` as ``z_T`` (solve()
     NaN-poisons it); its cotangent is ignored.  ``rtol``/``atol`` sit in
     differentiable positions so they may be traced scalars (per-request
-    tolerance in serving) — their cotangents are zero.  Callers go through
-    ``repro.solve(..., adaptive=True,
-    gradient_mode="reversible_adjoint")``.
+    tolerance in serving) — their cotangents are zero.  ``use_pallas``
+    fuses the embedded stepper's state updates and the backward replay's
+    reconstruction + cotangent phases — the kernels take the controller's
+    traced ``dt`` as a scalar operand, so adaptivity and fusion compose.
+    ``bridge_depth`` caps the dyadic descent of Brownian queries (see
+    ``repro.solve``); the backward replay descends to the SAME depth, so
+    replay stays bit-identical at any setting.  Callers go through
+    ``repro.solve(..., adaptive=True, gradient_mode="reversible_adjoint")``.
     """
     final, stats = _adaptive_forward(drift, diffusion, params, z0, bm,
                                      rtol, atol, t0, t1, max_steps, dt0,
-                                     noise)
+                                     noise, use_pallas, bridge_depth)
     return final.z, stats.converged
 
 
 def _adaptive_forward(drift, diffusion, params, z0, bm, rtol, atol,
-                      t0, t1, max_steps, dt0, noise):
+                      t0, t1, max_steps, dt0, noise, use_pallas=False,
+                      bridge_depth=None):
     # late import: solve.py imports this module at load time (the driver
     # lives there per the front-end layering; by call time it is loaded)
     from .solve import _adaptive_loop, get_solver
 
     return _adaptive_loop(get_solver("reversible_heun"), drift, diffusion,
                           params, z0, bm, t0, t1, rtol, atol, max_steps,
-                          dt0, noise)
+                          dt0, noise, use_pallas=use_pallas,
+                          bridge_depth=bridge_depth)
 
 
 def _fwd_rule_adaptive(drift, diffusion, params, z0, bm, rtol, atol,
-                       t0, t1, max_steps, dt0, noise):
+                       t0, t1, max_steps, dt0, noise, use_pallas,
+                       bridge_depth):
     final, stats = _adaptive_forward(drift, diffusion, params, z0, bm,
                                      rtol, atol, t0, t1, max_steps, dt0,
-                                     noise)
+                                     noise, use_pallas, bridge_depth)
     # O(max_steps)-scalar residuals: terminal solver state + the accepted
     # (t, dt) sequence (+ params, bm key).  rtol/atol ride along only to
     # shape their zero cotangents.
@@ -325,10 +424,12 @@ def _fwd_rule_adaptive(drift, diffusion, params, z0, bm, rtol, atol,
 
 
 def _bwd_rule_adaptive(drift, diffusion, t0, t1, max_steps, dt0, noise,
-                       residuals, g_out):
+                       use_pallas, bridge_depth, residuals, g_out):
     g_zT, _g_converged = g_out  # bool output: float0 cotangent, discarded
     params, final, bm, dts, ts, n_acc, rtol, atol = residuals
     dtype = final.z.dtype
+    fused = use_pallas and noise == "diagonal"
+    dkw = {} if bridge_depth is None else {"depth": bridge_depth}
 
     def local_forward(params_, z, zh, mu, sigma, t, dt, dw):
         return tuple(reversible_heun_step(
@@ -352,28 +453,42 @@ def _bwd_rule_adaptive(drift, diffusion, t0, t1, max_steps, dt0, noise,
             j = jnp.maximum(i, 0)
             dt = dts[j]
             t_left = ts[j]
-            # same value-difference (and astype order) as the forward
-            # driver, so dw is bit-identical to what the accepted step saw
+            # same value-difference (astype order AND bridge depth) as the
+            # forward driver, so dw is bit-identical to what the accepted
+            # step saw
             if hasattr(bm, "value"):
-                dw = (bm.value(t_left + dt).astype(dtype)
-                      - bm.value(t_left).astype(dtype))
+                dw = (bm.value(t_left + dt, **dkw).astype(dtype)
+                      - bm.value(t_left, **dkw).astype(dtype))
             else:
-                dw = bm.evaluate(t_left, t_left + dt).astype(dtype)
+                dw = bm.evaluate(t_left, t_left + dt, **dkw).astype(dtype)
             # Algorithm 2 inline, anchored on the STORED left endpoint so
             # the vector fields are evaluated at bit-identical times (the
             # helper's ``t1 - dt`` would reintroduce fp drift).
             z1, zh1, mu1, sigma1 = state1
-            zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
-            mu = drift(params, t_left, zh)
-            sigma = diffusion(params, t_left, zh)
-            z = z1 - 0.5 * (mu + mu1) * dt - apply_diffusion(
-                0.5 * (sigma + sigma1), dw, noise)
-            state0 = RevHeunState(z, zh, mu, sigma)
-            _, vjp = jax.vjp(
-                lambda p, z_, zh_, mu_, sigma_: local_forward(
-                    p, z_, zh_, mu_, sigma_, t_left, dt, dw),
-                params, state0.z, state0.zh, state0.mu, state0.sigma)
-            dparams, d_z, d_zh, d_mu, d_sigma = vjp(cts)
+            if fused:
+                from ..kernels import ops
+                zh = ops.rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt,
+                                         sign=-1.0)
+                mu = drift(params, t_left, zh)
+                sigma = diffusion(params, t_left, zh)
+                z = ops.rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt,
+                                        sign=-1.0)
+                state0 = RevHeunState(z, zh, mu, sigma)
+                dparams, (d_z, d_zh, d_mu, d_sigma) = _fused_local_vjp(
+                    drift, diffusion, params, state0, cts, t_left, dt, dw)
+            else:
+                zh = (2.0 * z1 - zh1 - mu1 * dt
+                      - apply_diffusion(sigma1, dw, noise))
+                mu = drift(params, t_left, zh)
+                sigma = diffusion(params, t_left, zh)
+                z = z1 - 0.5 * (mu + mu1) * dt - apply_diffusion(
+                    0.5 * (sigma + sigma1), dw, noise)
+                state0 = RevHeunState(z, zh, mu, sigma)
+                _, vjp = jax.vjp(
+                    lambda p, z_, zh_, mu_, sigma_: local_forward(
+                        p, z_, zh_, mu_, sigma_, t_left, dt, dw),
+                    params, state0.z, state0.zh, state0.mu, state0.sigma)
+                dparams, d_z, d_zh, d_mu, d_sigma = vjp(cts)
             g_params = jax.tree.map(jnp.add, g_params, dparams)
             return (state0, (d_z, d_zh, d_mu, d_sigma), g_params)
 

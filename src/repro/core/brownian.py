@@ -86,11 +86,17 @@ class BrownianPath:
 
     # -- fixed-grid exact increments ----------------------------------------
     def increment(self, n: jax.Array, num_steps: int) -> jax.Array:
-        """Exact increment of step ``n`` on the ``num_steps`` uniform grid."""
+        """Exact increment of step ``n`` on the ``num_steps`` uniform grid.
+
+        Dispatches through :mod:`repro.kernels.ops`: on TPU the draw runs
+        *inside* a Pallas kernel (counter-based Threefry keyed on ``n``,
+        bit-identical to the ``jax.random`` scheme — see
+        :mod:`repro.kernels.prng`); elsewhere the pure-jnp oracle runs.
+        """
+        from ..kernels import ops
+
         dt = (self.t1 - self.t0) / num_steps
-        k = jax.random.fold_in(self.key, n)
-        z = _normal_like(k, self.shape, self.dtype)
-        return z * jnp.sqrt(jnp.asarray(dt, self.dtype))
+        return ops.brownian_increment(self.key, n, self.shape, self.dtype, dt)
 
     def increments(self, num_steps: int) -> jax.Array:
         """All increments on the grid, stacked (for dense baselines/tests)."""
@@ -114,43 +120,24 @@ class BrownianPath:
 
         Invariant per level: the current interval ``[a, b]`` has endpoint
         values ``(wa, wb)``; the midpoint value is bridge-sampled from the
-        interval's splittable seed, then we recurse into the half containing
-        ``t``.  At dyadic ``t`` this terminates exactly; otherwise the depth
-        bound gives a 2^-depth * (t1-t0) resolution (the VBT trade-off, but
-        sharing seeds with ``increment`` queries is not required — a
-        BrownianPath used with bridge queries should use ``evaluate`` only).
+        interval's splittable seed (the Lévy bridge of the paper's eq. (8):
+        mean = linear interpolant, std = sqrt((b-m)(m-a)/(b-a))), then we
+        recurse into the half containing ``t``.  At dyadic ``t`` this
+        terminates exactly; otherwise the depth bound gives a
+        2^-depth * (t1-t0) resolution (the VBT trade-off, but sharing seeds
+        with ``increment`` queries is not required — a BrownianPath used
+        with bridge queries should use ``evaluate`` only).
+
+        Dispatches through :mod:`repro.kernels.ops`: on TPU the whole
+        descent runs as ONE Pallas kernel (in-kernel Threefry + a single
+        batched midpoint draw); elsewhere the vectorised jnp oracle
+        (:func:`repro.kernels.ref.brownian_value`) runs — same per-element
+        op sequence, so both produce identical bits.
         """
-        t = jnp.asarray(t, self.dtype)
-        span = self.t1 - self.t0
-        k_root = jax.random.fold_in(self.key, jnp.uint32(0xB0B))
-        w_t1 = _normal_like(k_root, self.shape, self.dtype) * jnp.sqrt(
-            jnp.asarray(span, self.dtype)
-        )
+        from ..kernels import ops
 
-        def body(i, carry):
-            a, b, wa, wb, k = carry
-            m = 0.5 * (a + b)
-            # Lévy bridge at the midpoint: mean is the linear interpolant,
-            # std is sqrt((b-m)(m-a)/(b-a)) — eq. (8) with s = midpoint.
-            km = jax.random.fold_in(k, jnp.uint32(1))
-            zm = _normal_like(km, self.shape, self.dtype)
-            std = jnp.sqrt(jnp.asarray((b - m) * (m - a) / (b - a), self.dtype))
-            wm = 0.5 * (wa + wb) + std * zm
-            go_left = t <= m
-            a2 = jnp.where(go_left, a, m)
-            b2 = jnp.where(go_left, m, b)
-            wa2 = jnp.where(go_left, wa, wm)
-            wb2 = jnp.where(go_left, wm, wb)
-            k2 = jax.random.fold_in(k, jnp.where(go_left, jnp.uint32(2), jnp.uint32(3)))
-            return (a2, b2, wa2, wb2, k2)
-
-        a0 = jnp.asarray(self.t0, self.dtype)
-        b0 = jnp.asarray(self.t1, self.dtype)
-        w0 = jnp.zeros(self.shape, self.dtype)
-        a, b, wa, wb, _ = lax.fori_loop(0, depth, body, (a0, b0, w0, w_t1, k_root))
-        # linear interpolation inside the final (tiny) interval
-        frac = jnp.clip((t - a) / jnp.maximum(b - a, jnp.finfo(self.dtype).tiny), 0.0, 1.0)
-        return wa + frac * (wb - wa)
+        return ops.brownian_value(self.key, t, self.t0, self.t1, self.shape,
+                                  self.dtype, depth=depth)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -27,9 +27,13 @@ eagerly rather than producing another solver's numerics silently.
 
 ``use_pallas_kernels=True`` routes the reversible-Heun hot loop through the
 fused Pallas kernels (:mod:`repro.kernels.reversible_heun_step`): the
-forward scan and the backward's closed-form state reconstruction run
-fused; local per-step VJPs stay unfused (the kernels have no VJP rule).
-On non-TPU backends the kernels run in interpret mode automatically.
+forward scan (with in-kernel Brownian generation where the path allows),
+the backward's closed-form state reconstruction, AND the per-step local
+VJP all run fused — the hand-derived backward kernel pair is the
+derivative, registered through the reversible-adjoint ``custom_vjp``.
+Because the kernels take ``dt`` as a traced scalar operand this composes
+with ``adaptive=True``.  On non-TPU backends the kernels run in interpret
+mode automatically.
 
 Batched multi-trajectory solving (:func:`solve_batched`) vmaps a batch of
 initial states against a batch of Brownian seeds — one fused XLA program
@@ -39,6 +43,8 @@ for the whole ensemble instead of a Python loop of solves.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -221,12 +227,14 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
         if gradient_mode == "discretise":
             raise ValueError(
                 "use_pallas_kernels is incompatible with gradient_mode="
-                "'discretise': pallas_call has no VJP rule, so plain AD "
-                "cannot trace through the fused step.  Use gradient_mode="
+                "'discretise': the fused kernels' derivative is the "
+                "hand-derived backward kernel pair registered through the "
+                "reversible-adjoint custom_vjp, not a pallas_call VJP rule "
+                "plain AD could trace.  Use gradient_mode="
                 "'reversible_adjoint' instead — its forward pass is the "
                 "identical fused scan (so this also covers pure forward "
-                "simulation), and differentiating it gives the exact "
-                "adjoint with fused backward reconstruction")
+                "simulation), and differentiating it runs the fused exact "
+                "adjoint")
     if gradient_mode == "continuous_adjoint" and save_trajectory:
         raise ValueError(
             "continuous_adjoint backpropagates a terminal-value cotangent "
@@ -253,11 +261,11 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
                 "re-integrates on the forward's fixed uniform grid; use "
                 "'reversible_adjoint' (exact adjoint replaying the accepted "
                 "grid) or 'discretise' (forward simulation only)")
-        if use_pallas_kernels:
-            raise ValueError(
-                "adaptive=True is incompatible with use_pallas_kernels: the "
-                "fused step kernels require a static dt, and the adaptive "
-                "controller's dt is a traced value")
+        # adaptive × use_pallas_kernels is legal: the fused step kernels
+        # take dt as a traced scalar operand, so the controller's
+        # per-attempt dt flows straight into the kernels (the
+        # discretise-mode rejection above already covers the one invalid
+        # gradient mode).
 
 
 # =============================================================================
@@ -298,13 +306,17 @@ class AdaptiveStats(NamedTuple):
 
 
 def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
-                   rtol, atol, max_steps: int, dt0, noise):
+                   rtol, atol, max_steps: int, dt0, noise,
+                   use_pallas: bool = False,
+                   bridge_depth: Optional[int] = None):
     """Bounded ``lax.while_loop`` accept/reject driver.
 
     Brownian increments come from ``bm.evaluate(t, t + dt)`` — arbitrary-
     interval queries on ONE underlying sample path, so a rejected step and
     its halved retry see pathwise-consistent noise (the Lévy-bridge
-    conditioning of the paper's eq. (8)).  The loop runs at most
+    conditioning of the paper's eq. (8)).  ``bridge_depth`` caps the dyadic
+    descent of those queries (paths that take a ``depth`` argument only);
+    ``None`` keeps each path's own default.  The loop runs at most
     ``2 * max_steps`` iterations (``max_steps`` accepts + ``max_steps``
     rejects); if the budget is exhausted the solve stops early and
     ``stats.converged`` is False.
@@ -317,6 +329,10 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
     dtype = z0.dtype
     step = spec.embedded_stepper
     rev = spec.stepper is reversible_heun_step
+    if use_pallas and rev:
+        # fused state updates; legal because dt rides into the kernels as a
+        # traced scalar operand (see repro.kernels.reversible_heun_step)
+        step = functools.partial(step, use_pallas=True)
     if rev:
         carry0 = RevHeunState(z0, z0, drift(params, t0, z0),
                               diffusion(params, t0, z0))
@@ -334,7 +350,9 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
     # ``evaluate(s, t) == value(t) - value(s)`` bitwise, which keeps the
     # backward replay (via evaluate) bit-identical to the forward.
     has_value = hasattr(bm, "value")
-    w_left0 = bm.value(t0).astype(dtype) if has_value else jnp.zeros((), dtype)
+    dkw = {} if bridge_depth is None else {"depth": bridge_depth}
+    w_left0 = (bm.value(t0, **dkw).astype(dtype) if has_value
+               else jnp.zeros((), dtype))
     state0 = (carry0, jnp.asarray(t0, dtype), jnp.asarray(dt0, dtype),
               jnp.asarray(1.0, dtype), jnp.asarray(0, jnp.int32),
               jnp.asarray(0, jnp.int32), zeros, zeros, w_left0,
@@ -353,11 +371,11 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
         is_last = dt >= remaining
         dt_eff = jnp.minimum(dt, remaining)
         if has_value:
-            w_right = bm.value(t + dt_eff).astype(dtype)
+            w_right = bm.value(t + dt_eff, **dkw).astype(dtype)
             dw = w_right - w_left
         else:
             w_right = w_left
-            dw = bm.evaluate(t, t + dt_eff).astype(dtype)
+            dw = bm.evaluate(t, t + dt_eff, **dkw).astype(dtype)
         cand, err = step(carry, t, dt_eff, dw, drift, diffusion, params, noise)
         scale = atol + rtol * jnp.maximum(jnp.abs(get_z(carry)),
                                           jnp.abs(get_z(cand)))
@@ -400,6 +418,21 @@ def _check_adaptive_bm(bm) -> None:
             f"DenseBrownianPath")
 
 
+def _check_bridge_depth(bm, bridge_depth) -> None:
+    if bridge_depth is None:
+        return
+    if not (isinstance(bridge_depth, int) and bridge_depth >= 1):
+        raise ValueError(
+            f"bridge_depth must be a positive int (dyadic descent levels), "
+            f"got {bridge_depth!r}")
+    probe = bm.value if hasattr(bm, "value") else bm.evaluate
+    if "depth" not in inspect.signature(probe).parameters:
+        raise ValueError(
+            f"bridge_depth requires a Brownian path whose point queries "
+            f"take a depth argument (BrownianPath); {type(bm).__name__} "
+            f"has a fixed resolution — drop bridge_depth")
+
+
 def solve_adaptive(
     drift: Callable,
     diffusion: Callable,
@@ -415,6 +448,7 @@ def solve_adaptive(
     max_steps: int = 4096,
     dt0: Optional[float] = None,
     noise: str = "diagonal",
+    bridge_depth: Optional[int] = None,
 ):
     """Adaptive solve returning ``(z_T, AdaptiveStats)``.
 
@@ -427,10 +461,12 @@ def solve_adaptive(
     spec = get_solver(solver)
     _validate(spec, "discretise", noise, False, False, adaptive=True)
     _check_adaptive_bm(bm)
+    _check_bridge_depth(bm, bridge_depth)
     if dt0 is None:
         dt0 = (t1 - t0) / 16
     carry, stats = _adaptive_loop(spec, drift, diffusion, params, z0, bm,
-                                  t0, t1, rtol, atol, max_steps, dt0, noise)
+                                  t0, t1, rtol, atol, max_steps, dt0, noise,
+                                  bridge_depth=bridge_depth)
     z = carry.z if spec.stepper is reversible_heun_step else carry
     return z, stats
 
@@ -455,6 +491,7 @@ def solve(
     atol: Optional[float] = None,
     max_steps: Optional[int] = None,
     dt0: Optional[float] = None,
+    bridge_depth: Optional[int] = None,
 ):
     """Solve ``dZ = μ_θ dt + σ_θ ∘ dW`` on ``[t0, t1]`` in ``num_steps`` steps.
 
@@ -482,10 +519,14 @@ def solve(
             trajectory (index 0 is ``z0``) instead of the terminal value.
             Must be ``False`` for "continuous_adjoint" and for adaptive
             mode (the accepted grid is non-uniform).
-        use_pallas_kernels: fuse the reversible-Heun state updates through
-            the Pallas kernels (diagonal noise; forbidden with
-            "discretise" — the fused ops are not AD-traceable — and with
-            adaptive mode, whose dt is traced).
+        use_pallas_kernels: fuse the reversible-Heun per-step pipeline
+            through the Pallas kernels — state updates, in-kernel Brownian
+            generation (fixed-grid ``BrownianPath``), and the hand-derived
+            backward cotangent phases (diagonal noise; forbidden with
+            "discretise", whose plain AD cannot trace ``pallas_call`` —
+            the fused derivative lives in the reversible-adjoint
+            ``custom_vjp``).  Composes with ``adaptive=True``: dt is a
+            traced kernel operand.
         adaptive: embedded-error-controlled stepping (DESIGN.md §10)
             instead of the fixed ``num_steps`` grid.  ``num_steps`` then
             only seeds the initial step ``dt0 = (t1-t0)/num_steps`` and the
@@ -509,6 +550,21 @@ def solve(
             or loosen the tolerance, or use :func:`solve_adaptive` to
             observe ``stats.converged`` gracefully.
         dt0: initial step size; defaults to ``(t1 - t0) / num_steps``.
+        bridge_depth: cap on the dyadic Lévy-bridge descent of each
+            adaptive Brownian query (``BrownianPath`` only; adaptive mode
+            only).  The default (``None``) keeps the path's own depth-24
+            resolution.  Each level costs one conditional-normal draw per
+            attempted step, so on CPU the descent dominates adaptive wall
+            clock; a solve run to tolerance ``rtol`` only needs the bridge
+            residual — std ``<= 0.5 * 2^(-depth/2)`` in units of
+            ``sqrt(t1-t0)`` — to sit well below ``rtol``, e.g. depth 10
+            gives 1.6e-2, which scaled by a diffusion of 0.05 is ~8e-4 of
+            state per unit time, comfortably inside a 2e-3 tolerance.  The
+            SAME depth is used by the exact adjoint's backward replay, so
+            replay stays bit-identical to the forward at any setting.
+            Truncating the descent is a controlled approximation of the
+            sample path — convergence-order studies should keep the
+            default.
 
     Returns:
         Trajectory or terminal value, differentiable w.r.t. ``params`` and
@@ -518,14 +574,16 @@ def solve(
     _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory,
               adaptive)
     if not adaptive and any(
-            v is not None for v in (rtol, atol, max_steps, dt0)):
+            v is not None for v in (rtol, atol, max_steps, dt0,
+                                    bridge_depth)):
         raise ValueError(
-            "rtol/atol/max_steps/dt0 are adaptive-mode options but "
-            "adaptive=False — pass adaptive=True (a fixed-grid solve would "
-            "silently ignore the requested tolerance)")
+            "rtol/atol/max_steps/dt0/bridge_depth are adaptive-mode options "
+            "but adaptive=False — pass adaptive=True (a fixed-grid solve "
+            "would silently ignore the requested tolerance)")
 
     if adaptive:
         _check_adaptive_bm(bm)
+        _check_bridge_depth(bm, bridge_depth)
         rtol = 1e-3 if rtol is None else rtol
         atol = 1e-6 if atol is None else atol
         if max_steps is None:
@@ -535,11 +593,13 @@ def solve(
         if gradient_mode == "reversible_adjoint":
             z, converged = reversible_heun_solve_adaptive(
                 drift, diffusion, params, z0, bm, rtol, atol,
-                t0, t1, max_steps, dt0, noise)
+                t0, t1, max_steps, dt0, noise, use_pallas_kernels,
+                bridge_depth)
         else:
             carry, stats = _adaptive_loop(
                 spec, drift, diffusion, params, z0, bm, t0, t1, rtol, atol,
-                max_steps, dt0, noise)
+                max_steps, dt0, noise, use_pallas=use_pallas_kernels,
+                bridge_depth=bridge_depth)
             z = carry.z if spec.stepper is reversible_heun_step else carry
             converged = stats.converged
         # a budget-exhausted solve sits at t_final < t1 — poison it rather

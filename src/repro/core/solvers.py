@@ -29,9 +29,11 @@ activation memory).  The O(1)-memory exact adjoint lives in
 The reversible-Heun hot loop optionally runs through the fused Pallas
 kernels (:mod:`repro.kernels.reversible_heun_step`) via
 ``use_pallas=True`` — see the kernel module docstring for the contract
-(diagonal noise, static dt, no AD through the fused ops).  Callers should
-normally go through the :func:`repro.core.solve.solve` front-end, which
-validates the flag against the solver registry.
+(diagonal noise; ``dt`` may be traced, so this includes the adaptive
+driver; plain AD must not trace through the fused ops — gradients use the
+hand-derived backward kernels via :mod:`repro.core.adjoint`).  Callers
+should normally go through the :func:`repro.core.solve.solve` front-end,
+which validates the flag against the solver registry.
 """
 
 from __future__ import annotations
@@ -98,31 +100,42 @@ class RevHeunState(NamedTuple):
 
 
 def reversible_heun_step(state: RevHeunState, t, dt, dw, drift, diffusion, params, noise,
-                         use_pallas: bool = False, interpret: Optional[bool] = None):
+                         use_pallas: bool = False, interpret: Optional[bool] = None,
+                         gen=None):
     """One step of Algorithm 1.  Exactly one drift+diffusion evaluation.
 
-    With ``use_pallas=True`` (diagonal noise, static ``dt`` only) the two
-    elementwise state updates run as fused Pallas kernels — AD must not
-    trace through this path (see the kernel module's contract).
+    With ``use_pallas=True`` (diagonal noise) the two elementwise state
+    updates run as fused Pallas kernels; ``dt`` may be a traced scalar (the
+    kernels take it as a scalar operand), so the adaptive driver's
+    controller-chosen step sizes work fused too.  AD must not trace through
+    this path — gradients go through the hand-derived backward kernels via
+    :mod:`repro.core.adjoint`.
+
+    ``gen=(key, n, dt_grid)`` generates this step's ``ΔW`` *inside* the
+    phase-1 kernel (counter-based Threefry keyed on ``n``, bitwise
+    ``BrownianPath.increment(n)`` with grid spacing ``dt_grid``) instead of
+    consuming ``dw`` — the fixed-grid time loop then never leaves the fused
+    path between noise generation and state update.  ``dw`` is ignored
+    when ``gen`` is given.
     """
     z, zh, mu, sigma = state
     if use_pallas and noise == "diagonal":
         run_kernel, interp = _pallas_dispatch(interpret)
-        if run_kernel:
-            from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+        from ..kernels import ops
 
-            zh1 = rev_heun_phase1(z, zh, mu, sigma, dw, dt=float(dt), interpret=interp)
-            mu1 = drift(params, t + dt, zh1)
-            sigma1 = diffusion(params, t + dt, zh1)
-            z1 = rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt=float(dt),
-                                 interpret=interp)
+        use_kernel = True if run_kernel and interp else (run_kernel or None)
+        if gen is not None:
+            key, n, dt_grid = gen
+            zh1, dw = ops.rev_heun_phase1_gen(z, zh, mu, sigma, key, n,
+                                              dt_grid, dt,
+                                              use_kernel=use_kernel)
         else:
-            from ..kernels import ref
-
-            zh1 = ref.rev_heun_phase1(z, zh, mu, sigma, dw, float(dt))
-            mu1 = drift(params, t + dt, zh1)
-            sigma1 = diffusion(params, t + dt, zh1)
-            z1 = ref.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, float(dt))
+            zh1 = ops.rev_heun_phase1(z, zh, mu, sigma, dw, dt,
+                                      use_kernel=use_kernel)
+        mu1 = drift(params, t + dt, zh1)
+        sigma1 = diffusion(params, t + dt, zh1)
+        z1 = ops.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt,
+                                 use_kernel=use_kernel)
         return RevHeunState(z1, zh1, mu1, sigma1)
     zh1 = 2.0 * z - zh + mu * dt + apply_diffusion(sigma, dw, noise)
     mu1 = drift(params, t + dt, zh1)
@@ -142,23 +155,15 @@ def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusi
     z1, zh1, mu1, sigma1 = state
     if use_pallas and noise == "diagonal":
         run_kernel, interp = _pallas_dispatch(interpret)
-        if run_kernel:
-            from ..kernels.reversible_heun_step import rev_heun_phase1, rev_heun_phase2
+        from ..kernels import ops
 
-            zh = rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt=float(dt), sign=-1.0,
-                                 interpret=interp)
-            mu = drift(params, t1 - dt, zh)
-            sigma = diffusion(params, t1 - dt, zh)
-            z = rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt=float(dt), sign=-1.0,
-                                interpret=interp)
-        else:
-            from ..kernels import ref
-
-            zh = ref.rev_heun_phase1(z1, zh1, mu1, sigma1, dw, float(dt), sign=-1.0)
-            mu = drift(params, t1 - dt, zh)
-            sigma = diffusion(params, t1 - dt, zh)
-            z = ref.rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, float(dt),
-                                    sign=-1.0)
+        use_kernel = True if run_kernel and interp else (run_kernel or None)
+        zh = ops.rev_heun_phase1(z1, zh1, mu1, sigma1, dw, dt, sign=-1.0,
+                                 use_kernel=use_kernel)
+        mu = drift(params, t1 - dt, zh)
+        sigma = diffusion(params, t1 - dt, zh)
+        z = ops.rev_heun_phase2(z1, mu, mu1, sigma, sigma1, dw, dt, sign=-1.0,
+                                use_kernel=use_kernel)
         return RevHeunState(z, zh, mu, sigma)
     zh = 2.0 * z1 - zh1 - mu1 * dt - apply_diffusion(sigma1, dw, noise)
     mu = drift(params, t1 - dt, zh)
@@ -193,8 +198,10 @@ def reversible_heun_reverse_step(state: RevHeunState, t1, dt, dw, drift, diffusi
 
 
 def reversible_heun_embedded_step(state: RevHeunState, t, dt, dw, drift, diffusion,
-                                  params, noise):
-    new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise)
+                                  params, noise, use_pallas: bool = False,
+                                  interpret: Optional[bool] = None):
+    new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
+                               use_pallas=use_pallas, interpret=interpret)
     return new, (new.z - new.zh) + (state.z - state.zh)
 
 

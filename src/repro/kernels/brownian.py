@@ -1,0 +1,162 @@
+"""In-kernel Brownian generation (counter-based Threefry) as Pallas kernels.
+
+Moving increment generation on-device removes the per-step host round-trip
+the solver loop otherwise pays: a fixed-grid step's ``ΔW`` and an adaptive
+attempt's bridge descent each become ONE kernel launch whose body runs the
+bit-exact ``jax.random`` op sequence (:mod:`repro.kernels.prng`).
+
+Three kernels:
+
+* :func:`brownian_increment` — ``fold_in(key, n)`` + shaped normal draw
+  scaled by ``sqrt(dt)``; bitwise ``BrownianPath.increment(n, num_steps)``.
+* :func:`brownian_value` — the full Lévy-bridge descent of
+  ``BrownianPath.value(t)`` fused into one grid: in-kernel key chaining,
+  one batched midpoint draw, elementwise combine.  This is what lets the
+  adaptive driver pay a single launch per attempted step instead of
+  ``depth`` sequential draws.
+* :func:`rev_heun_phase1_gen` — Algorithm 1's first state update with the
+  step's ``ΔW`` generated *inside the same kernel* (returns ``(ẑ_{n+1},
+  ΔW)`` so phase 2 reuses the increment without re-deriving it).
+
+Kernel contract
+===============
+
+* The kernel bodies call the :mod:`repro.kernels.ref` oracles on loaded
+  values — kernel and oracle are the SAME traced op sequence, so bitwise
+  parity (tests/test_kernel_parity.py) holds by construction and the tests
+  pin that the Pallas lowering/interpreter preserves it.
+* Whole-array blocks: Brownian states here are small ``(batch, w_dim)``
+  tensors; each kernel runs as a single VMEM-resident block with scalar
+  operands (key halves, counter, times) in SMEM.  Shapes that overflow
+  VMEM should use the unfused oracle path (``use_kernel=False``).
+* ``interpret=True`` runs the body under the Pallas interpreter — the
+  CPU/CI validation path (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+try:  # pltpu.SMEM exists only with the TPU plugin's pallas build
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover - CPU-only wheels
+    _SMEM = None
+
+
+def _smem_spec():
+    if _SMEM is None:
+        return pl.BlockSpec(memory_space=None)
+    return pl.BlockSpec(memory_space=_SMEM)
+
+
+def _scalar_specs(n: int):
+    return [_smem_spec() for _ in range(n)]
+
+
+def _increment_kernel(shape, dtype, k1_ref, k2_ref, n_ref, dt_ref, o_ref):
+    dw = ref.brownian_increment(k1_ref[0], k2_ref[0], n_ref[0], shape, dtype,
+                                dt_ref[0])
+    o_ref[...] = dw.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def brownian_increment(k1, k2, n, shape, dtype, dt, interpret: bool = True):
+    """Step-``n`` grid increment, generated in-kernel.
+
+    ``k1, k2``: raw uint32 key halves; ``n``: step counter; ``dt``: the
+    grid spacing (scalar, may be traced).
+    """
+    dtype = jnp.dtype(dtype)
+    shape = tuple(shape)
+    out = pl.pallas_call(
+        functools.partial(_increment_kernel, shape, dtype),
+        in_specs=_scalar_specs(4),
+        out_specs=pl.BlockSpec(shape, lambda: (0,) * len(shape)),
+        out_shape=jax.ShapeDtypeStruct(shape, dtype),
+        grid=(),
+        interpret=interpret,
+    )(jnp.asarray(k1, jnp.uint32).reshape(1),
+      jnp.asarray(k2, jnp.uint32).reshape(1),
+      jnp.asarray(n).reshape(1),
+      jnp.asarray(dt, dtype).reshape(1))
+    return out
+
+
+def _value_kernel(t0, t1, shape, dtype, depth, k1_ref, k2_ref, t_ref, o_ref):
+    w = ref.brownian_value(k1_ref[0], k2_ref[0], t_ref[0], t0, t1, shape,
+                           dtype, depth)
+    o_ref[...] = w.reshape(o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t0", "t1", "shape", "dtype", "depth", "interpret"))
+def brownian_value(k1, k2, t, t0, t1, shape, dtype, depth: int = 24,
+                   interpret: bool = True):
+    """``W(t) − W(t0)`` with the whole bridge descent fused into one kernel."""
+    dtype = jnp.dtype(dtype)
+    shape = tuple(shape)
+    out = pl.pallas_call(
+        functools.partial(_value_kernel, t0, t1, shape, dtype, depth),
+        in_specs=_scalar_specs(3),
+        out_specs=pl.BlockSpec(shape, lambda: (0,) * len(shape)),
+        out_shape=jax.ShapeDtypeStruct(shape, dtype),
+        grid=(),
+        interpret=interpret,
+    )(jnp.asarray(k1, jnp.uint32).reshape(1),
+      jnp.asarray(k2, jnp.uint32).reshape(1),
+      jnp.asarray(t, dtype).reshape(1))
+    return out
+
+
+def _phase1_gen_kernel(shape, dtype, z_ref, zh_ref, mu_ref, sig_ref,
+                       k1_ref, k2_ref, n_ref, dt_grid_ref, dt_ref, sign_ref,
+                       zh1_ref, dw_ref):
+    dw = ref.brownian_increment(k1_ref[0], k2_ref[0], n_ref[0], shape, dtype,
+                                dt_grid_ref[0])
+    dw = dw.reshape(dw_ref.shape)
+    sign = sign_ref[0]
+    zh1_ref[...] = ref.rev_heun_phase1(z_ref[...], zh_ref[...], mu_ref[...],
+                                       sig_ref[...], dw, dt_ref[0], sign)
+    dw_ref[...] = dw
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rev_heun_phase1_gen(z, zh, mu, sigma, k1, k2, n, dt_grid, dt,
+                        sign=1.0, interpret: bool = True):
+    """Fused Algorithm-1 phase 1 + in-kernel ΔW generation.
+
+    Returns ``(ẑ_{n+1}, ΔW_n)`` from one kernel launch: the increment is
+    drawn inside the grid (``fold_in(key, n)`` Threefry, scaled by
+    ``sqrt(dt_grid)``) and immediately consumed by the state update, so the
+    solver's time loop never leaves the kernel between noise generation and
+    state propagation.  ``dt_grid`` is the Brownian grid spacing (the
+    ``sqrt``-scaling), ``dt`` the integration step — identical for the
+    uniform fixed-step solvers that use this kernel.
+    """
+    dtype = z.dtype
+    shape = tuple(z.shape)
+    spec = pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    zh1, dw = pl.pallas_call(
+        functools.partial(_phase1_gen_kernel, shape, dtype),
+        in_specs=[spec] * 4 + _scalar_specs(6),
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(shape, dtype),
+                   jax.ShapeDtypeStruct(shape, dtype)),
+        grid=(),
+        interpret=interpret,
+    )(z, zh, mu, sigma,
+      jnp.asarray(k1, jnp.uint32).reshape(1),
+      jnp.asarray(k2, jnp.uint32).reshape(1),
+      jnp.asarray(n).reshape(1),
+      jnp.asarray(dt_grid, dtype).reshape(1),
+      jnp.asarray(dt, dtype).reshape(1),
+      jnp.asarray(sign, dtype).reshape(1))
+    return zh1, dw

@@ -3,18 +3,25 @@
 Policy: on a TPU backend the compiled kernels run natively; on CPU/GPU the
 pure-jnp oracle runs (fast + lets XLA fuse).  ``use_kernel=True`` forces the
 Pallas path with ``interpret=True`` off-TPU — this is what the kernel tests
-exercise.  The dry-run/roofline path uses the reference implementations so
-`cost_analysis()` reflects the XLA graph (see DESIGN.md §5).
+exercise.  Setting ``REPRO_FORCE_PALLAS_INTERPRET=1`` in the environment
+flips the default (``use_kernel=None``) to the forced path too — CI's
+kernel-parity job uses it to sweep the whole differential suite through the
+Pallas interpreter without touching call sites.  The dry-run/roofline path
+uses the reference implementations so `cost_analysis()` reflects the XLA
+graph (see DESIGN.md §5).
 """
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 
+from . import brownian as _bk
 from . import flash_attention as _fa
 from . import fused_mlp as _fm
+from . import prng
 from . import ref
 from . import reversible_heun_step as _rh
 from . import ssd_chunk as _ssd
@@ -27,7 +34,8 @@ def _on_tpu() -> bool:
 def _decide(use_kernel: Optional[bool]):
     """-> (run_kernel, interpret)."""
     if use_kernel is None:
-        use_kernel = _on_tpu()
+        use_kernel = (_on_tpu()
+                      or bool(os.environ.get("REPRO_FORCE_PALLAS_INTERPRET")))
     return use_kernel, not _on_tpu()
 
 
@@ -54,18 +62,76 @@ def ssd_chunk(x, a, b, c, chunk=64, use_kernel: Optional[bool] = None):
     return ref.ssd_scan(x, a, b, c)
 
 
-def rev_heun_phase1(z, zh, mu, sigma, dw, dt, use_kernel: Optional[bool] = None):
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign: float = 1.0,
+                    use_kernel: Optional[bool] = None):
     run, interp = _decide(use_kernel)
     if run:
-        return _rh.rev_heun_phase1(z, zh, mu, sigma, dw, float(dt), interpret=interp)
-    return ref.rev_heun_phase1(z, zh, mu, sigma, dw, dt)
+        return _rh.rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign=sign,
+                                   interpret=interp)
+    return ref.rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign)
 
 
-def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, use_kernel: Optional[bool] = None):
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, sign: float = 1.0,
+                    use_kernel: Optional[bool] = None):
     run, interp = _decide(use_kernel)
     if run:
-        return _rh.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, float(dt), interpret=interp)
-    return ref.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt)
+        return _rh.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt,
+                                   sign=sign, interpret=interp)
+    return ref.rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, sign)
+
+
+def rev_heun_bwd_phase1(g_z1, g_mu1, g_sig1, dw, dt,
+                        use_kernel: Optional[bool] = None):
+    """Backward pre-field cotangents ``(c_mu1, c_sig1)`` — fused adjoint."""
+    run, interp = _decide(use_kernel)
+    if run:
+        return _rh.rev_heun_bwd_phase1(g_z1, g_mu1, g_sig1, dw, dt,
+                                       interpret=interp)
+    return ref.rev_heun_bwd_phase1(g_z1, g_mu1, g_sig1, dw, dt)
+
+
+def rev_heun_bwd_phase2(g_z1, ghat, dw, dt, use_kernel: Optional[bool] = None):
+    """Backward post-field cotangents ``(d_z, d_zh, d_mu, d_sigma)``."""
+    run, interp = _decide(use_kernel)
+    if run:
+        return _rh.rev_heun_bwd_phase2(g_z1, ghat, dw, dt, interpret=interp)
+    return ref.rev_heun_bwd_phase2(g_z1, ghat, dw, dt)
+
+
+def rev_heun_phase1_gen(z, zh, mu, sigma, key, n, dt_grid, dt, sign=1.0,
+                        use_kernel: Optional[bool] = None):
+    """Phase 1 with in-kernel ΔW generation — ``(ẑ_{n+1}, ΔW_n)``."""
+    run, interp = _decide(use_kernel)
+    k1, k2 = prng.key_data_pair(key)
+    if run:
+        return _bk.rev_heun_phase1_gen(z, zh, mu, sigma, k1, k2, n, dt_grid,
+                                       dt, sign=sign, interpret=interp)
+    dw = ref.brownian_increment(k1, k2, n, z.shape, z.dtype, dt_grid)
+    return ref.rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign), dw
+
+
+def brownian_increment(key, n, shape, dtype, dt,
+                       use_kernel: Optional[bool] = None):
+    """Step-``n`` uniform-grid increment, counter-keyed on ``n``."""
+    run, interp = _decide(use_kernel)
+    k1, k2 = prng.key_data_pair(key)
+    if run:
+        return _bk.brownian_increment(k1, k2, n, tuple(shape), dtype, dt,
+                                      interpret=interp)
+    return ref.brownian_increment(k1, k2, n, tuple(shape), dtype, dt)
+
+
+def brownian_value(key, t, t0, t1, shape, dtype, depth: int = 24,
+                   use_kernel: Optional[bool] = None):
+    """``W(t) − W(t0)`` via single-kernel Lévy-bridge descent."""
+    run, interp = _decide(use_kernel)
+    k1, k2 = prng.key_data_pair(key)
+    if run:
+        return _bk.brownian_value(k1, k2, t, float(t0), float(t1),
+                                  tuple(shape), dtype, depth=depth,
+                                  interpret=interp)
+    return ref.brownian_value(k1, k2, t, t0, t1, tuple(shape), dtype,
+                              depth=depth)
 
 
 def fused_xent(logits, labels, use_kernel: Optional[bool] = None):

@@ -1,0 +1,177 @@
+"""Counter-based PRNG primitives, bit-exact vs ``jax.random`` (Threefry-2x32).
+
+The Brownian kernels (:mod:`repro.kernels.brownian`) generate increments
+*inside* the Pallas grid, so the solver's time loop no longer round-trips
+to a host-side ``jax.random`` call per step.  For that to be legal the
+in-kernel draws must be **bitwise identical** to what
+:class:`repro.core.brownian.BrownianPath` produces via ``jax.random`` —
+the forward/backward replay contract (DESIGN.md §10) is bitwise, so even
+1-ulp drift in the noise would break gradient exactness.
+
+This module is therefore a transcription of the exact op sequence of
+JAX's Threefry path (``jax._src.prng``, with the default
+``threefry_partitionable=False``), written only with primitives that are
+legal inside a Pallas kernel body (elementwise ``lax`` ops, ``iota``,
+bitcasts — no ``jax.random``, no key pytrees):
+
+* :func:`threefry2x32` — the 20-round hash (5 × 4 rounds, rotation
+  schedule ``(13,15,26,6)/(17,29,16,24)``, key schedule
+  ``k0, k1, k0^k1^0x1BD11BDA`` with round-index injections);
+* :func:`fold_in` — ``threefry2x32(key, seed_pair(n))``, matching
+  ``jax.random.fold_in``'s counter scheme;
+* :func:`random_bits` — 32/64-bit streams over an ``iota`` counter with
+  JAX's odd-size padding and split-halves layout;
+* :func:`uniform` / :func:`normal` — the mantissa-shift bitcast and
+  ``sqrt(2)·erf_inv`` transform, op for op.
+
+tests/test_kernel_parity.py pins every function here bitwise against its
+``jax.random`` counterpart across dtypes and shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+_ROT_A = (13, 15, 26, 6)
+_ROT_B = (17, 29, 16, 24)
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl(x, d: int):
+    d = np.uint32(d)
+    return lax.shift_left(x, d) | lax.shift_right_logical(x, np.uint32(32 - d))
+
+
+def _round4(x0, x1, rots):
+    for r in rots:
+        x0 = x0 + x1
+        x1 = _rotl(x1, r)
+        x1 = x0 ^ x1
+    return x0, x1
+
+
+def threefry2x32(k1, k2, x1, x2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The Threefry-2x32 hash; all args uint32, broadcastable.
+
+    Bitwise identical to ``jax._src.prng.threefry2x32_p`` (both the rolled
+    and unrolled XLA lowerings compute this same sequence).
+    """
+    k1 = jnp.asarray(k1, jnp.uint32)
+    k2 = jnp.asarray(k2, jnp.uint32)
+    x1 = jnp.asarray(x1, jnp.uint32)
+    x2 = jnp.asarray(x2, jnp.uint32)
+    ks = (k1, k2, k1 ^ k2 ^ _PARITY)
+    x1 = x1 + ks[0]
+    x2 = x2 + ks[1]
+    # 5 groups of 4 rounds; after group i (1-based) inject (ks[i], ks[i+1] + i)
+    schedule = ((_ROT_A, 1, 2), (_ROT_B, 2, 0), (_ROT_A, 0, 1),
+                (_ROT_B, 1, 2), (_ROT_A, 2, 0))
+    for i, (rots, ka, kb) in enumerate(schedule):
+        x1, x2 = _round4(x1, x2, rots)
+        x1 = x1 + ks[ka]
+        x2 = x2 + ks[kb] + np.uint32(i + 1)
+    return x1, x2
+
+
+def seed_pair(data) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``(hi, lo)`` uint32 pair for an integer counter — ``threefry_seed``."""
+    data = jnp.asarray(data)
+    if data.dtype.itemsize <= 4:
+        hi = jnp.zeros((), jnp.uint32)
+        lo = lax.convert_element_type(data, jnp.uint32)
+    else:
+        hi = lax.convert_element_type(
+            lax.shift_right_logical(data, np.int64(32)), jnp.uint32)
+        lo = lax.convert_element_type(
+            jnp.bitwise_and(data, np.uint32(0xFFFFFFFF)), jnp.uint32)
+    return hi, lo
+
+
+def fold_in(k1, k2, data) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """New raw key pair — bitwise ``jax.random.fold_in(key, data)``."""
+    hi, lo = seed_pair(data)
+    return threefry2x32(k1, k2, hi, lo)
+
+
+def random_bits(k1, k2, bit_width: int, size: int) -> jnp.ndarray:
+    """Flat uint{32,64} stream of ``size`` draws — ``_threefry_random_bits``.
+
+    The counter layout mirrors JAX exactly: ``max_count =
+    ceil(bit_width·size/32)`` counters ``iota(uint32, max_count)``,
+    zero-padded to even length, split in half for the two hash lanes; for
+    64-bit output the two halves recombine as ``hi << 32 | lo``.
+    """
+    if bit_width not in (32, 64):
+        raise ValueError(f"bit_width must be 32 or 64, got {bit_width}")
+    max_count = -(-bit_width * size // 32)
+    odd = max_count % 2
+    half = (max_count + odd) // 2
+    counts = lax.iota(jnp.uint32, half)
+    x1 = counts
+    x2 = counts + np.uint32(half)
+    if odd:
+        # JAX pads the counter stream with one zero before splitting it in
+        # half, hashes, then drops the pad — lane 2's last counter is 0.
+        x2 = jnp.where(counts == np.uint32(half - 1), np.uint32(0), x2)
+    y1, y2 = threefry2x32(k1, k2, x1, x2)
+    bits = lax.concatenate([y1, y2[:half - odd]], 0)
+    if bit_width == 64:
+        hi = lax.convert_element_type(bits[:size], jnp.uint64)
+        lo = lax.convert_element_type(bits[size:], jnp.uint64)
+        bits = lax.shift_left(hi, np.uint64(32)) | lo
+    return bits
+
+
+def uniform(k1, k2, size: int, dtype) -> jnp.ndarray:
+    """Flat uniforms on the *unit* transform of ``jax.random.uniform``
+    with ``minval=lo, maxval=hi`` applied by :func:`normal` — here the
+    raw ``bitcast(mantissa | 1.0) − 1`` stream in [0, 1)."""
+    dtype = jnp.dtype(dtype)
+    finfo = jnp.finfo(dtype)
+    nbits, nmant = finfo.bits, finfo.nmant
+    uint_dtype = jnp.uint32 if nbits == 32 else jnp.uint64
+    bits = random_bits(k1, k2, nbits, size)
+    float_bits = lax.bitwise_or(
+        lax.shift_right_logical(bits, np.array(nbits - nmant, uint_dtype)),
+        np.array(1.0, dtype).view(uint_dtype))
+    return lax.bitcast_convert_type(float_bits, dtype) - np.array(1.0, dtype)
+
+
+def uniform_range(k1, k2, size: int, dtype, minval, maxval) -> jnp.ndarray:
+    """``jax.random.uniform(key, (size,), dtype, minval, maxval)`` bitwise."""
+    dtype = jnp.dtype(dtype)
+    minval = np.array(minval, dtype)
+    maxval = np.array(maxval, dtype)
+    floats = uniform(k1, k2, size, dtype)
+    return lax.max(jnp.broadcast_to(minval, (size,)),
+                   floats * (maxval - minval) + minval)
+
+
+def normal(k1, k2, size: int, dtype) -> jnp.ndarray:
+    """Flat standard normals — bitwise ``jax.random.normal(key, (size,))``."""
+    dtype = jnp.dtype(dtype)
+    lo = np.nextafter(np.array(-1.0, dtype), np.array(0.0, dtype), dtype=dtype)
+    hi = np.array(1.0, dtype)
+    u = uniform_range(k1, k2, size, dtype, lo, hi)
+    return lax.mul(np.array(np.sqrt(2), dtype), lax.erf_inv(u))
+
+
+def normal_like(k1, k2, shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+    """Shaped standard normals — bitwise ``jax.random.normal(key, shape)``."""
+    size = math.prod(shape)
+    return normal(k1, k2, size, dtype).reshape(shape)
+
+
+def key_data_pair(key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a JAX PRNG key (typed or raw ``(2,) uint32``) into scalars."""
+    import jax
+
+    if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    key = jnp.asarray(key)
+    return key[..., 0], key[..., 1]

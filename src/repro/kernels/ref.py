@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from ..nn.core import lipswish
+from . import prng
 
 
 # -----------------------------------------------------------------------------
@@ -17,18 +19,133 @@ from ..nn.core import lipswish
 # -----------------------------------------------------------------------------
 
 
-def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, sign: float = 1.0):
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign: float = 1.0):
     """ẑ_{n+1} = 2 z_n − ẑ_n + μ_n Δt + σ_n ΔW_n   (Algorithm 1, line 3).
 
     ``sign=-1.0`` is the algebraic inverse (Algorithm 2), matching the
-    fused kernel's contract.
+    fused kernel's contract.  ``dt`` may be a Python float or a traced
+    scalar (the adaptive driver's step size).
     """
     return 2.0 * z - zh + mu * (sign * dt) + (sign * sigma) * dw
 
 
-def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, sign: float = 1.0):
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, sign: float = 1.0):
     """z_{n+1} = z_n + ½(μ_n+μ_{n+1})Δt + ½(σ_n+σ_{n+1})ΔW_n."""
     return z + (sign * 0.5 * dt) * (mu + mu1) + (sign * 0.5) * (sigma + sigma1) * dw
+
+
+# -----------------------------------------------------------------------------
+# reversible Heun hand-derived backward (cotangent) phases
+# -----------------------------------------------------------------------------
+#
+# The transpose of one Algorithm-1 step, factored around the single
+# vector-field VJP exactly as DESIGN.md §3 derives it.  Op order is chosen
+# so each output is BITWISE what ``jax.vjp`` of the unfused stepper
+# produces (power-of-two scalings commute with IEEE rounding; two-term sums
+# keep the transpose's grouping) — tests/test_adjoint.py pins fused ≡
+# unfused gradients to 0.0 in f64 on the strength of this.
+
+
+def rev_heun_bwd_phase1(g_z1, g_mu1, g_sig1, dw, dt):
+    """Pre-field cotangents: seed the vector-field VJP.
+
+    ``c_mu1 = ḡ_mu1 + ½Δt·ḡ_z1`` and ``c_sig1 = ḡ_sig1 + ½ΔW·ḡ_z1`` —
+    the phase-2 (z₁) transpose contributions joined with the direct
+    output cotangents of μ₁/σ₁.
+    """
+    c_mu1 = g_mu1 + 0.5 * (g_z1 * dt)
+    c_sig1 = g_sig1 + 0.5 * (g_z1 * dw)
+    return c_mu1, c_sig1
+
+
+def rev_heun_bwd_phase2(g_z1, ghat, dw, dt):
+    """Post-field cotangents: distribute ``ĝ`` (the total ẑ₁ cotangent,
+    i.e. ``ḡ_zh1`` + the field VJP's ẑ₁ contribution) onto the step-``n``
+    state.  Returns ``(d_z, d_zh, d_mu, d_sigma)``.
+    """
+    d_z = g_z1 + 2.0 * ghat
+    d_zh = -ghat
+    d_mu = 0.5 * (g_z1 * dt) + ghat * dt
+    d_sigma = 0.5 * (g_z1 * dw) + ghat * dw
+    return d_z, d_zh, d_mu, d_sigma
+
+
+# -----------------------------------------------------------------------------
+# counter-based Brownian generation (bitwise jax.random / BrownianPath)
+# -----------------------------------------------------------------------------
+
+
+def brownian_increment(k1, k2, n, shape, dtype, dt):
+    """Step-``n`` increment of a ``num_steps`` uniform grid — bitwise
+    ``BrownianPath.increment(n, num_steps)`` with ``dt = span/num_steps``.
+
+    ``k1, k2``: the path key's raw uint32 scalars (``prng.key_data_pair``).
+    """
+    dtype = jnp.dtype(dtype)
+    f1, f2 = prng.fold_in(k1, k2, n)
+    z = prng.normal_like(f1, f2, tuple(shape), dtype)
+    return z * jnp.sqrt(jnp.asarray(dt, dtype))
+
+
+def brownian_value(k1, k2, t, t0, t1, shape, dtype, depth: int = 24):
+    """``W(t) − W(t0)`` by Lévy-bridge descent — bitwise
+    ``BrownianPath.value(t, depth)``.
+
+    Identical conditioning to ``BrownianPath._w`` but with the descent
+    *vectorised*: the interval sequence, per-level bridge stds and
+    per-level midpoint keys depend only on ``t`` (scalar work), so all
+    ``depth`` midpoint normals are drawn in ONE batched threefry+erf_inv
+    call instead of ``depth`` sequential full-shape draws — the op
+    sequence per element is unchanged, so every draw is bit-identical.
+    """
+    dtype = jnp.dtype(dtype)
+    shape = tuple(shape)
+    t = jnp.asarray(t, dtype)
+    span = t1 - t0
+    r1, r2 = prng.fold_in(k1, k2, jnp.uint32(0xB0B))
+    w_t1 = prng.normal_like(r1, r2, shape, dtype) * jnp.sqrt(
+        jnp.asarray(span, dtype))
+
+    # -- scalar descent: intervals, stds, direction bits, midpoint keys
+    def scal_body(i, c):
+        a, b, c1, c2, stds, gos, km1s, km2s = c
+        m = 0.5 * (a + b)
+        std = jnp.sqrt(jnp.asarray((b - m) * (m - a) / (b - a), dtype))
+        go_left = t <= m
+        f1, f2 = prng.fold_in(c1, c2, jnp.uint32(1))
+        n1, n2 = prng.fold_in(
+            c1, c2, jnp.where(go_left, jnp.uint32(2), jnp.uint32(3)))
+        stds = stds.at[i].set(std)
+        gos = gos.at[i].set(go_left)
+        km1s = km1s.at[i].set(f1)
+        km2s = km2s.at[i].set(f2)
+        a2 = jnp.where(go_left, a, m)
+        b2 = jnp.where(go_left, m, b)
+        return (a2, b2, n1, n2, stds, gos, km1s, km2s)
+
+    a0 = jnp.asarray(t0, dtype)
+    b0 = jnp.asarray(t1, dtype)
+    u0 = jnp.zeros((depth,), jnp.uint32)
+    a, b, _, _, stds, gos, km1s, km2s = lax.fori_loop(
+        0, depth, scal_body,
+        (a0, b0, r1, r2, jnp.zeros((depth,), dtype),
+         jnp.zeros((depth,), bool), u0, u0))
+
+    # -- ONE batched midpoint draw for all levels (the wall-clock win)
+    zms = jax.vmap(lambda u, v: prng.normal_like(u, v, shape, dtype))(
+        km1s, km2s)
+
+    # -- cheap sequential combine (elementwise FMAs + selects only)
+    def comb_body(i, c):
+        wa, wb = c
+        wm = 0.5 * (wa + wb) + stds[i] * zms[i]
+        return (jnp.where(gos[i], wa, wm), jnp.where(gos[i], wm, wb))
+
+    wa, wb = lax.fori_loop(0, depth, comb_body,
+                           (jnp.zeros(shape, dtype), w_t1))
+    frac = jnp.clip((t - a) / jnp.maximum(b - a, jnp.finfo(dtype).tiny),
+                    0.0, 1.0)
+    return wa + frac * (wb - wa)
 
 
 # -----------------------------------------------------------------------------

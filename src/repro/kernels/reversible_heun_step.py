@@ -13,6 +13,15 @@ used by the O(1)-memory backward reconstruction in
 :mod:`repro.core.adjoint`), which negates the Δt and ΔW terms in-kernel so
 no extra negated operand ever touches HBM.
 
+The backward (cotangent) phases are the hand-derived transpose of one
+Algorithm-1 step, factored around the single vector-field VJP exactly as
+DESIGN.md §3 derives it: :func:`rev_heun_bwd_phase1` builds the seeds of
+the field VJP, :func:`rev_heun_bwd_phase2` distributes its result onto the
+step-``n`` state cotangents.  Their op order is chosen so every output is
+BITWISE what ``jax.vjp`` of the unfused stepper produces — the fused exact
+adjoint in :mod:`repro.core.adjoint` rests on that identity, and
+tests/test_kernel_parity.py pins it.
+
 Kernel contract
 ===============
 
@@ -25,21 +34,24 @@ Kernel contract
   ``(256|512, 256, 128, 64, …, 1)``, so *any* shape is legal, but
   performance wants ``cols`` a multiple of the 128-lane VPU width and
   ``rows`` a multiple of 8 (f32) / 16 (bf16) sublanes.
-* **dt is static**: ``dt`` (a Python float) is baked into the kernel at
-  trace time — fixed-step solvers re-use one compiled kernel for the whole
-  scan.  Traced step sizes must use the unfused path.
+* **dt is a traced scalar operand**: ``dt`` rides in as a ``(1, 1)`` block
+  broadcast to every grid cell, so one compiled kernel serves every step
+  size — this is what lets the *adaptive* driver (traced, per-attempt
+  ``dt``) use the fused path.  ``sign`` stays static (±1.0 is a branch of
+  the algorithm, not data).
 * **Interpret mode**: ``interpret=True`` runs the kernel body under the
   Pallas interpreter — required on CPU, and how CI validates the kernels
-  without a TPU (see tests/test_kernels.py and tests/test_solve.py).  The
-  solver hot loop does NOT pay this off-TPU: ``repro.core.solvers``
+  without a TPU (see tests/test_kernel_parity.py and tests/test_solve.py).
+  The solver hot loop does NOT pay this off-TPU: ``repro.core.solvers``
   dispatches per the kernels/ops.py policy (compiled kernel on TPU, the
   fused jnp oracle in :mod:`repro.kernels.ref` elsewhere) and only forces
   the interpreter when a caller passes ``interpret=True`` explicitly.
-* **Differentiability**: ``pallas_call`` has no VJP rule — these kernels
-  must only appear where AD never traces through them: the custom-VJP
-  forward scan and the closed-form backward reconstruction.  The local
-  per-step VJPs in :mod:`repro.core.adjoint` deliberately use the unfused
-  stepper.  ``jax.vmap`` (batched multi-trajectory solving) IS supported.
+* **Differentiability**: ``pallas_call`` still has no *automatic* VJP rule
+  — but it no longer needs one: the backward phases above ARE the
+  derivative, registered through the solver-level ``custom_vjp`` in
+  :mod:`repro.core.adjoint`.  AD never traces through a kernel; the
+  adjoint rules call the backward kernels directly.  ``jax.vmap``
+  (batched multi-trajectory solving) IS supported.
 """
 
 from __future__ import annotations
@@ -47,10 +59,12 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _phase1_kernel(dt, sign, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, o_ref):
+def _phase1_kernel(sign, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, dt_ref, o_ref):
+    dt = dt_ref[0, 0]
     o_ref[...] = (
         2.0 * z_ref[...]
         - zh_ref[...]
@@ -59,12 +73,34 @@ def _phase1_kernel(dt, sign, z_ref, zh_ref, mu_ref, sig_ref, dw_ref, o_ref):
     )
 
 
-def _phase2_kernel(dt, sign, z_ref, mu_ref, mu1_ref, sig_ref, sig1_ref, dw_ref, o_ref):
+def _phase2_kernel(sign, z_ref, mu_ref, mu1_ref, sig_ref, sig1_ref, dw_ref,
+                   dt_ref, o_ref):
+    dt = dt_ref[0, 0]
     o_ref[...] = (
         z_ref[...]
         + (sign * 0.5 * dt) * (mu_ref[...] + mu1_ref[...])
         + (sign * 0.5) * (sig_ref[...] + sig1_ref[...]) * dw_ref[...]
     )
+
+
+def _bwd_phase1_kernel(gz1_ref, gmu1_ref, gsig1_ref, dw_ref, dt_ref,
+                       cmu1_ref, csig1_ref):
+    dt = dt_ref[0, 0]
+    g_z1 = gz1_ref[...]
+    cmu1_ref[...] = gmu1_ref[...] + 0.5 * (g_z1 * dt)
+    csig1_ref[...] = gsig1_ref[...] + 0.5 * (g_z1 * dw_ref[...])
+
+
+def _bwd_phase2_kernel(gz1_ref, ghat_ref, dw_ref, dt_ref,
+                       dz_ref, dzh_ref, dmu_ref, dsig_ref):
+    dt = dt_ref[0, 0]
+    g_z1 = gz1_ref[...]
+    ghat = ghat_ref[...]
+    dw = dw_ref[...]
+    dz_ref[...] = g_z1 + 2.0 * ghat
+    dzh_ref[...] = -ghat
+    dmu_ref[...] = 0.5 * (g_z1 * dt) + ghat * dt
+    dsig_ref[...] = 0.5 * (g_z1 * dw) + ghat * dw
 
 
 def _tile(n: int, pref: int) -> int:
@@ -74,35 +110,75 @@ def _tile(n: int, pref: int) -> int:
     return 1
 
 
-def _call_elementwise(kernel, args, interpret: bool):
+def _call_elementwise(kernel, args, scalars, interpret: bool, n_out: int = 1):
+    """Tiled elementwise pallas_call: tensor ``args`` share one block grid,
+    ``scalars`` ride along as (1, 1) blocks mapped to every grid cell.
+
+    Interpret mode runs the whole array as ONE block: the interpreter's
+    per-cell grid loop compiles each block as a separate XLA subcomputation,
+    and LLVM's FMA-contraction choices differ between that loop body and the
+    plain jnp oracle graph — observable as ±1-ulp drift at block boundaries.
+    A single block keeps interpret mode bit-identical to the oracle (the
+    parity contract tests/test_kernel_parity.py pins); compiled TPU mode
+    keeps the tile ladder for VMEM residency.
+    """
     x = args[0]
     orig_shape = x.shape
-    flat = [a.reshape(-1, orig_shape[-1]) if a.ndim > 1 else a.reshape(1, -1) for a in args]
+    flat = [a.reshape(-1, orig_shape[-1]) if a.ndim > 1 else a.reshape(1, -1)
+            for a in args]
     rows, cols = flat[0].shape
-    br, bc = _tile(rows, 256), _tile(cols, 512)
+    if interpret:
+        br, bc = rows, cols
+    else:
+        br, bc = _tile(rows, 256), _tile(cols, 512)
     spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    svals = [jnp.asarray(s, x.dtype).reshape(1, 1) for s in scalars]
+    shape = jax.ShapeDtypeStruct((rows, cols), x.dtype)
     out = pl.pallas_call(
         kernel,
         grid=(rows // br, cols // bc),
-        in_specs=[spec] * len(flat),
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        in_specs=[spec] * len(flat) + [sspec] * len(svals),
+        out_specs=spec if n_out == 1 else (spec,) * n_out,
+        out_shape=shape if n_out == 1 else (shape,) * n_out,
         interpret=interpret,
-    )(*flat)
-    return out.reshape(orig_shape)
+    )(*flat, *svals)
+    if n_out == 1:
+        return out.reshape(orig_shape)
+    return tuple(o.reshape(orig_shape) for o in out)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "sign", "interpret"))
-def rev_heun_phase1(z, zh, mu, sigma, dw, dt: float, sign: float = 1.0,
+@functools.partial(jax.jit, static_argnames=("sign", "interpret"))
+def rev_heun_phase1(z, zh, mu, sigma, dw, dt, sign: float = 1.0,
                     interpret: bool = True):
     """ẑ_{n+1} = 2z − ẑ + sign·(μΔt + σΔW) — fused, one HBM pass."""
     return _call_elementwise(
-        functools.partial(_phase1_kernel, dt, sign), (z, zh, mu, sigma, dw), interpret)
+        functools.partial(_phase1_kernel, sign), (z, zh, mu, sigma, dw), (dt,),
+        interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "sign", "interpret"))
-def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt: float, sign: float = 1.0,
+@functools.partial(jax.jit, static_argnames=("sign", "interpret"))
+def rev_heun_phase2(z, mu, mu1, sigma, sigma1, dw, dt, sign: float = 1.0,
                     interpret: bool = True):
     """z_{n+1} = z + sign·(½(μ+μ′)Δt + ½(σ+σ′)ΔW) — fused, one HBM pass."""
     return _call_elementwise(
-        functools.partial(_phase2_kernel, dt, sign), (z, mu, mu1, sigma, sigma1, dw), interpret)
+        functools.partial(_phase2_kernel, sign), (z, mu, mu1, sigma, sigma1, dw),
+        (dt,), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rev_heun_bwd_phase1(g_z1, g_mu1, g_sig1, dw, dt, interpret: bool = True):
+    """Backward pre-field phase: ``(c_mu1, c_sig1)`` seeds for the single
+    vector-field VJP — ``c_mu1 = ḡ_mu1 + ½Δt·ḡ_z1``,
+    ``c_sig1 = ḡ_sig1 + ½ΔW·ḡ_z1``."""
+    return _call_elementwise(
+        _bwd_phase1_kernel, (g_z1, g_mu1, g_sig1, dw), (dt,), interpret,
+        n_out=2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rev_heun_bwd_phase2(g_z1, ghat, dw, dt, interpret: bool = True):
+    """Backward post-field phase: distribute the total ẑ₁ cotangent ``ĝ``
+    onto the step-``n`` state — ``(d_z, d_zh, d_mu, d_sigma)``."""
+    return _call_elementwise(
+        _bwd_phase2_kernel, (g_z1, ghat, dw), (dt,), interpret, n_out=4)

@@ -81,14 +81,19 @@ def test_adaptive_rejects_continuous_adjoint(key):
               save_trajectory=False, adaptive=True)
 
 
-def test_adaptive_rejects_pallas_fusion(key):
+def test_adaptive_accepts_pallas_fusion(key):
+    """adaptive × use_pallas_kernels is legal (dt is a traced kernel
+    operand) and agrees with the unfused adaptive solve."""
     params, drift, diffusion = _ou()
     z0 = jnp.ones((2, 3))
     bm = BrownianPath(key, 0.0, 1.0, (2, 3))
-    with pytest.raises(ValueError, match="static dt"):
-        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
-              solver="reversible_heun", gradient_mode="reversible_adjoint",
-              save_trajectory=False, adaptive=True, use_pallas_kernels=True)
+    kw = dict(solver="reversible_heun", gradient_mode="reversible_adjoint",
+              save_trajectory=False, adaptive=True)
+    z_fused = solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
+                    use_pallas_kernels=True, **kw)
+    z_plain = solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8, **kw)
+    assert jnp.all(jnp.isfinite(z_fused))
+    assert jnp.allclose(z_fused, z_plain, atol=1e-6)
 
 
 def test_tolerance_options_require_adaptive(key):
@@ -396,5 +401,43 @@ def test_adaptive_on_dense_path_converges_to_reference(key):
             assert bool(st.converged)
             errs.append(float(jnp.max(jnp.abs(zT - ref))))
         assert errs[1] < errs[0], errs
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("bridge_depth", [None, 10])
+def test_fused_adaptive_adjoint_bitwise_matches_unfused(key, bridge_depth):
+    """Accepted-grid variant of the fused gradient-exactness regression:
+    adaptive solve with use_pallas_kernels=True produces the SAME bits as
+    the unfused adaptive adjoint in float64 — the fused backward replay
+    (kernel reconstruction + hand-derived cotangent phases) is the jax.vjp
+    transpose, and the controller's accepted grid is identical because the
+    fused forward is bitwise too.  A capped bridge_depth must preserve all
+    of this: the backward replay descends to the SAME depth as the
+    forward, so the replayed dw stays bit-identical at any setting."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        p0 = {"shift": jnp.float64(0.1)}
+        z0 = jnp.full((4,), 0.2, jnp.float64)
+        bm = BrownianPath(key, 0.0, 1.0, (4,), jnp.float64)
+        kw = dict(solver="reversible_heun",
+                  gradient_mode="reversible_adjoint",
+                  save_trajectory=False, adaptive=True,
+                  rtol=1e-4, atol=1e-7, max_steps=2048,
+                  bridge_depth=bridge_depth)
+
+        def loss(p, z, fused):
+            zT = solve(_burst, _burst_diffusion, p, z, bm, 0.0, 1.0, 16,
+                       use_pallas_kernels=fused, **kw)
+            return jnp.sum(zT ** 2)
+
+        v_f, g_f = jax.value_and_grad(loss, argnums=(0, 1))(p0, z0, True)
+        v_u, g_u = jax.value_and_grad(loss, argnums=(0, 1))(p0, z0, False)
+        assert jnp.isfinite(v_f), "adaptive solve did not converge"
+        np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_u))
+        for a, b in zip(jax.tree.leaves(g_f), jax.tree.leaves(g_u)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg="fused adaptive gradient != unfused")
     finally:
         jax.config.update("jax_enable_x64", False)

@@ -128,3 +128,78 @@ def test_exact_adjoint_memory_scaling(key):
     # subtract the cotangent-trajectory contribution before comparing
     assert (r256 - traj_bytes_256) <= (r16 - traj_bytes_16) * 1.5 + 1024, \
         f"residuals grew with steps: {r16} -> {r256}"
+
+
+# -----------------------------------------------------------------------------
+# fused (Pallas) exact adjoint: gradient-exactness regressions
+# -----------------------------------------------------------------------------
+
+
+def _diag_problem(key, batch=4, x_dim=8, dtype=jnp.float64):
+    """Diagonal-noise problem — the fused kernels' supported layout."""
+    from repro import nn
+
+    k1, k2, kz, kw = jax.random.split(key, 4)
+    params = {"f": nn.mlp_init(k1, [x_dim, 8, x_dim], dtype=dtype),
+              "g": nn.mlp_init(k2, [x_dim, 8, x_dim], dtype=dtype)}
+    drift = lambda p, t, x: nn.mlp(p["f"], x, nn.lipswish, jnp.tanh)
+    diffusion = lambda p, t, x: 0.2 * nn.mlp(p["g"], x, nn.lipswish, jnp.tanh)
+    z0 = jax.random.normal(kz, (batch, x_dim), dtype)
+    bm = BrownianPath(kw, 0.0, 1.0, (batch, x_dim), dtype)
+    return params, drift, diffusion, z0, bm
+
+
+def _assert_tree_equal(g1, g2, msg):
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("save_trajectory", [True, False],
+                         ids=["trajectory", "final"])
+def test_fused_adjoint_bitwise_matches_unfused(key, save_trajectory):
+    """use_pallas_kernels=True must not change the gradient AT ALL: the
+    hand-derived backward kernels are bitwise the jax.vjp transpose of the
+    unfused step, so fused and unfused exact adjoints agree to 0.0 in
+    float64 — not merely to round-off."""
+    from repro.core.solve import solve
+
+    params, drift, diffusion, z0, bm = _diag_problem(key)
+    n = 32
+
+    def loss(p, z, fused):
+        out = solve(drift, diffusion, p, z, bm, 0.0, 1.0, n,
+                    gradient_mode="reversible_adjoint",
+                    save_trajectory=save_trajectory,
+                    use_pallas_kernels=fused)
+        return jnp.sum(out ** 2)
+
+    v_f, g_f = jax.value_and_grad(loss, argnums=(0, 1))(params, z0, True)
+    v_u, g_u = jax.value_and_grad(loss, argnums=(0, 1))(params, z0, False)
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_u),
+                                  err_msg="fused forward value drifted")
+    _assert_tree_equal(g_f, g_u, "fused gradient != unfused gradient")
+
+
+def test_fused_adjoint_matches_plain_ad(key):
+    """Fused exact adjoint vs plain AD through the unfused frozen-grid scan
+    — float64 round-off, same bar the unfused adjoint meets."""
+    from repro.core.solve import solve
+
+    params, drift, diffusion, z0, bm = _diag_problem(key)
+    n = 64
+
+    def loss_fused(p, z):
+        traj = solve(drift, diffusion, p, z, bm, 0.0, 1.0, n,
+                     gradient_mode="reversible_adjoint",
+                     use_pallas_kernels=True)
+        return jnp.sum(traj[-1] ** 2)
+
+    def loss_dto(p, z):
+        traj = sde_solve(drift, diffusion, p, z, bm, 0.0, 1.0, n,
+                         solver="reversible_heun", noise="diagonal")
+        return jnp.sum(traj[-1] ** 2)
+
+    g1 = jax.grad(loss_fused, argnums=(0, 1))(params, z0)
+    g2 = jax.grad(loss_dto, argnums=(0, 1))(params, z0)
+    assert _rel_err(g1, g2) < 1e-12

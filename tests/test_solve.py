@@ -123,6 +123,54 @@ def test_pallas_flag_validation(key):
               noise="general", use_pallas_kernels=True)
 
 
+def test_pallas_flag_validation_is_mode_not_adaptivity(key):
+    """The pallas rejection table is about gradient mode and noise, NOT
+    adaptivity: adaptive × pallas × discretise is still rejected (plain AD
+    cannot trace pallas_call), while the same flags under
+    reversible_adjoint are legal — the fused kernels take the controller's
+    dt as a traced scalar operand (covered end-to-end in
+    tests/test_adaptive.py)."""
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 4))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 4))
+    with pytest.raises(ValueError, match="discretise"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 4,
+              solver="reversible_heun", use_pallas_kernels=True,
+              save_trajectory=False, adaptive=True)
+    with pytest.raises(ValueError, match="diagonal"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 4,
+              solver="reversible_heun", gradient_mode="reversible_adjoint",
+              noise="general", use_pallas_kernels=True,
+              save_trajectory=False, adaptive=True)
+
+
+def test_bridge_depth_validation(key):
+    """bridge_depth is an adaptive-only BrownianPath-only option; every
+    invalid use is rejected eagerly with an actionable message."""
+    from repro.core.brownian import DenseBrownianPath
+
+    params, drift, diffusion = _ou()
+    z0 = jnp.ones((2, 4))
+    bm = BrownianPath(key, 0.0, 1.0, (2, 4))
+    # fixed-grid solve would silently ignore it
+    with pytest.raises(ValueError, match="adaptive-mode options"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 4,
+              bridge_depth=10)
+    # a fixed-resolution path has no descent to cap
+    dbm = DenseBrownianPath.sample(key, 0.0, 1.0, 16, (2, 4))
+    with pytest.raises(ValueError, match="fixed resolution"):
+        solve(drift, diffusion, params, z0, dbm, 0.0, 1.0, 4,
+              adaptive=True, save_trajectory=False, bridge_depth=10)
+    # nonsensical depths
+    with pytest.raises(ValueError, match="positive int"):
+        solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 4,
+              adaptive=True, save_trajectory=False, bridge_depth=0)
+    # and the valid case runs (depth caps the descent, still converges)
+    out = solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 16,
+                adaptive=True, save_trajectory=False, bridge_depth=12)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
 def test_register_solver_validates_specs():
     with pytest.raises(ValueError, match="unknown gradient mode"):
         register_solver(SolverSpec(
