@@ -27,6 +27,7 @@ SUITES = {
     "convergence": convergence.main,         # paper Figs. 5/6 (App. D.4)
     "latent_sde": latent_sde.main,           # paper Fig. 2 / App. B on the ELBO
     "serving": serving.main,                 # trajectory-sampling throughput
+    "serving_load": serving.main_load,       # open-loop continuous-batching gate
 }
 
 

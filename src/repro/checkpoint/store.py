@@ -12,12 +12,18 @@ save).  ``restore_checkpoint`` finds the newest valid step — the auto-resume
 path of launch/train.py.  Leaves are addressed by their pytree key-path so a
 restore is robust to dict-ordering changes.
 
-**Serving bundles** (DESIGN.md §9): training additionally persists a
+**Serving bundles** (DESIGN.md §9/§11): training additionally persists a
 params-only checkpoint under ``<dir>/serving/`` whose manifest carries the
-``repro-serving/v1`` handshake — workload name + the model config needed to
-rebuild the parameter template.  launch/serve.py restores *only* from a
-bundle, so a training checkpoint saved under different flags or an older
-code version dies with a named error instead of a silent shape mismatch.
+``repro-serving/v2`` handshake — a **list of named model entries**
+(``model_id`` + workload + the model config needed to rebuild each
+parameter template), so one bundle can carry a whole model registry.
+PR 4-era ``repro-serving/v1`` bundles (one anonymous workload) are
+transparently upgraded at read time to a single-entry registry under
+``model_id="default"``; an unknown schema version raises
+:class:`UnknownServingSchemaError`.  ``repro.serving`` restores *only*
+from a bundle, so a training checkpoint saved under different flags or an
+older code version dies with a named error instead of a silent shape
+mismatch.
 """
 
 from __future__ import annotations
@@ -31,8 +37,17 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
-SERVING_SCHEMA = "repro-serving/v1"
+SERVING_SCHEMA_V1 = "repro-serving/v1"
+SERVING_SCHEMA_V2 = "repro-serving/v2"
+#: The schema new bundles are written with.
+SERVING_SCHEMA = SERVING_SCHEMA_V2
+#: The model id a v1 bundle's single anonymous workload is upgraded to.
+DEFAULT_MODEL_ID = "default"
 _SERVING_SUBDIR = "serving"
+
+
+class UnknownServingSchemaError(ValueError):
+    """A serving bundle carries a schema this code version cannot read."""
 
 
 def _leaf_names(tree) -> Tuple[list, Any]:
@@ -138,24 +153,48 @@ def config_to_meta(cfg) -> dict:
 
 
 def save_serving_bundle(ckpt_dir, step: int, params, workload: str,
-                        cfg) -> Path:
+                        cfg, model_id: str = DEFAULT_MODEL_ID) -> Path:
     """Persist a params-only serving checkpoint under ``<ckpt_dir>/serving``.
 
-    The manifest carries the handshake: schema tag, workload name, and the
-    model config (so launch/serve.py can rebuild the parameter template and
-    the sampler without the training flags)."""
-    meta = {"schema": SERVING_SCHEMA, "workload": workload,
+    Writes the ``repro-serving/v2`` handshake: a single named model entry
+    (``model_id`` + workload + config) so ``repro.serving`` can rebuild the
+    parameter template and the sampler without the training flags.  For a
+    multi-model bundle use :func:`save_serving_registry`."""
+    return save_serving_registry(ckpt_dir, step,
+                                 {model_id: (params, workload, cfg)})
+
+
+def save_serving_registry(ckpt_dir, step: int, models: dict) -> Path:
+    """Persist N named models as ONE v2 serving bundle.
+
+    ``models``: ``{model_id: (params, workload, cfg)}``.  The params trees
+    are stored under their model id (leaf paths are prefixed), and the
+    manifest's ``models`` list carries one entry per id — the registry
+    handshake ``repro.serving.ModelRegistry.load`` restores from."""
+    if not models:
+        raise ValueError("a serving bundle needs at least one model entry")
+    meta = {"schema": SERVING_SCHEMA,
+            "models": [{"model_id": mid, "workload": workload,
+                        "config": config_to_meta(cfg)}
+                       for mid, (_, workload, cfg) in models.items()]}
+    tree = {mid: params for mid, (params, _, _) in models.items()}
+    return save_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, step, tree,
+                           meta=meta)
+
+
+def save_serving_bundle_v1(ckpt_dir, step: int, params, workload: str,
+                           cfg) -> Path:
+    """Write the PR 4-era single-workload v1 bundle (flat params tree).
+
+    Kept as the fixture writer for the v1→v2 upgrade path — production
+    code writes v2 via :func:`save_serving_bundle`."""
+    meta = {"schema": SERVING_SCHEMA_V1, "workload": workload,
             "config": config_to_meta(cfg)}
     return save_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, step, params,
                            meta=meta)
 
 
-def load_serving_meta(ckpt_dir) -> Tuple[dict, int]:
-    """Read the newest serving bundle's handshake -> ``(meta, step)``.
-
-    Named errors for every way the handshake can be absent or stale —
-    launch/serve.py surfaces these verbatim instead of a pytree-leaf
-    mismatch deep inside restore."""
+def _raw_serving_manifest(ckpt_dir) -> Tuple[dict, int]:
     sdir = Path(ckpt_dir) / _SERVING_SUBDIR
     step = latest_step(sdir)
     if step is None:
@@ -167,16 +206,83 @@ def load_serving_meta(ckpt_dir) -> Tuple[dict, int]:
             f"for a fresh-init service")
     manifest = json.loads(
         (sdir / f"step_{step:012d}" / "MANIFEST.json").read_text())
-    meta = manifest.get("meta") or {}
-    if meta.get("schema") != SERVING_SCHEMA:
+    return manifest.get("meta") or {}, step
+
+
+def load_serving_manifest(ckpt_dir) -> Tuple[dict, int]:
+    """Read the newest serving bundle's handshake as **v2** -> ``(meta, step)``.
+
+    ``meta["models"]`` is always a list of ``{model_id, workload, config}``
+    entries: a v1 bundle is transparently upgraded to a single-entry
+    registry under ``model_id="default"`` (``meta["upgraded_from"]`` marks
+    it, and :func:`restore_serving_model` reads its flat leaf layout).  An
+    unknown schema raises :class:`UnknownServingSchemaError`; an absent
+    bundle raises ``FileNotFoundError`` — named errors ``repro.serving``
+    surfaces verbatim instead of a pytree-leaf mismatch deep inside
+    restore."""
+    meta, step = _raw_serving_manifest(ckpt_dir)
+    schema = meta.get("schema")
+    if schema == SERVING_SCHEMA_V1:
+        meta = {"schema": SERVING_SCHEMA,
+                "upgraded_from": SERVING_SCHEMA_V1,
+                "models": [{"model_id": DEFAULT_MODEL_ID,
+                            "workload": meta.get("workload"),
+                            "config": meta.get("config", {})}]}
+    elif schema != SERVING_SCHEMA_V2:
+        raise UnknownServingSchemaError(
+            f"serving bundle under {ckpt_dir} has schema {schema!r}; this "
+            f"code reads {SERVING_SCHEMA_V2!r} (and upgrades "
+            f"{SERVING_SCHEMA_V1!r}) — written by an incompatible code "
+            f"version; re-run training or upgrade the reader")
+    if not meta.get("models"):
         raise ValueError(
-            f"serving bundle under {ckpt_dir} has schema "
-            f"{meta.get('schema')!r}, expected {SERVING_SCHEMA!r} — written "
-            f"by an incompatible code version; re-run training")
+            f"serving bundle under {ckpt_dir} carries no model entries — "
+            f"corrupt manifest; re-run training")
     return meta, step
 
 
+def load_serving_meta(ckpt_dir) -> Tuple[dict, int]:
+    """Back-compat single-model view of the handshake -> ``(meta, step)``.
+
+    ``meta`` carries flat ``workload``/``config`` keys like the v1 reader
+    did.  Multi-entry bundles are rejected by name — callers wanting the
+    registry go through :func:`load_serving_manifest`."""
+    meta, step = load_serving_manifest(ckpt_dir)
+    models = meta["models"]
+    if len(models) != 1:
+        raise ValueError(
+            f"serving bundle under {ckpt_dir} carries {len(models)} model "
+            f"entries ({[m['model_id'] for m in models]}); the single-model "
+            f"reader cannot pick one — use "
+            f"repro.checkpoint.load_serving_manifest / "
+            f"repro.serving.ModelRegistry.load")
+    entry = models[0]
+    return {"schema": meta["schema"], "model_id": entry["model_id"],
+            "workload": entry["workload"], "config": entry["config"]}, step
+
+
+def restore_serving_model(ckpt_dir, like_tree, model_id: str,
+                          step: Optional[int] = None):
+    """Restore ONE named model's params from a serving bundle.
+
+    v2 bundles store each model's leaves under its id; an upgraded v1
+    bundle stores the single ``"default"`` model flat — both layouts
+    restore bitwise into ``like_tree``'s structure."""
+    meta, newest = load_serving_manifest(ckpt_dir)
+    ids = [m["model_id"] for m in meta["models"]]
+    if model_id not in ids:
+        raise ValueError(
+            f"serving bundle under {ckpt_dir} has no model {model_id!r} "
+            f"(entries: {ids})")
+    sdir = Path(ckpt_dir) / _SERVING_SUBDIR
+    if meta.get("upgraded_from") == SERVING_SCHEMA_V1:
+        return restore_checkpoint(sdir, like_tree, step=step)
+    tree, got = restore_checkpoint(sdir, {model_id: like_tree}, step=step)
+    return tree[model_id], got
+
+
 def restore_serving_bundle(ckpt_dir, like_tree, step: Optional[int] = None):
-    """Restore the params-only serving tree into ``like_tree``'s structure."""
-    return restore_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, like_tree,
-                              step=step)
+    """Back-compat: restore the params of a bundle's sole model entry."""
+    meta, _ = load_serving_meta(ckpt_dir)  # rejects multi-entry by name
+    return restore_serving_model(ckpt_dir, like_tree, meta["model_id"],
+                                 step=step)

@@ -567,29 +567,41 @@ def generator_rollout_chunk(params, cfg: NeuralSDEConfig, keys, x0, t_start,
     """Continue generator trajectories over one time chunk
     ``[t_start, t_start + span]`` of a streamed horizon.
 
-    ``t_start`` may be a *traced* scalar: the drift/diffusion consume it
+    ``t_start`` may be a *traced* scalar — or, since PR 7, a traced
+    ``(B,)`` **per-row vector**: the drift/diffusion consume it
     arithmetically only, so one compiled program serves every chunk of the
-    stream (launch/serve.py compiles per bucket, not per chunk).  ``keys``
-    must be pre-folded per chunk by the caller — the Brownian sample is
-    keyed per (row, chunk), keeping the stream deterministic and rows
-    independent.  Runs ``gradient_mode="discretise"`` (plain scan): serving
-    takes no gradients, and the traced ``t_start`` rules out the fused
-    path's static-``dt`` contract.
+    stream AND every mix of horizon positions inside one batch — the
+    property the continuous-batching scheduler (``repro.serving``) builds
+    on, where rows admitted at different chunk boundaries share a compiled
+    batch.  ``keys`` must be pre-folded per chunk by the caller — the
+    Brownian sample is keyed per (row, chunk), keeping the stream
+    deterministic, rows independent, and a mid-flight join bitwise
+    identical to the same request run solo.  Runs
+    ``gradient_mode="discretise"`` (plain scan): serving takes no
+    gradients, and the traced ``t_start`` rules out the fused path's
+    static-``dt`` contract.
 
     Returns ``(ys, xT)``: ys (num_steps+1, B, data_dim) with row 0 the
     chunk-entry state (== previous chunk's final row, for continuity
     checks), and xT (B, hidden_dim) to carry into the next chunk.
     """
+    t_start = jnp.asarray(t_start, cfg.dtype)
+    t_axis = 0 if t_start.ndim == 1 else None
+    if t_start.ndim > 1:
+        raise ValueError(
+            f"t_start must be a scalar or a (B,) per-row vector, got shape "
+            f"{t_start.shape}")
 
-    def one(k, x0_i):
+    def one(k, x0_i, t0_i):
         bm = BrownianPath(k, 0.0, span, (cfg.noise_dim,), cfg.dtype)
         traj = solve(gen_drift(cfg), gen_diffusion(cfg), params, x0_i, bm,
-                     t_start, t_start + span, num_steps,
+                     t0_i, t0_i + span, num_steps,
                      solver=cfg.solver, gradient_mode="discretise",
                      noise="general")
         return nn.linear(params["ell"], traj), traj[-1]
 
-    return jax.vmap(one, in_axes=(0, 0), out_axes=(1, 0))(keys, x0)
+    return jax.vmap(one, in_axes=(0, 0, t_axis),
+                    out_axes=(1, 0))(keys, x0, t_start)
 
 
 def latent_sde_sample_paths(params, cfg: LatentSDEConfig, keys):

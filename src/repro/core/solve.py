@@ -569,6 +569,19 @@ def solve(
     Returns:
         Trajectory or terminal value, differentiable w.r.t. ``params`` and
         ``z0`` according to ``gradient_mode``.
+
+    The serving sampler contract: every adaptive *batch* sampler built on
+    this subsystem (``repro.core.sde.generator_sample_terminal``, exposed
+    per-bucket via ``repro.launch.steps.make_adaptive_terminal_step``)
+    returns a ``(samples, converged)`` pair — ``samples`` of shape
+    ``(batch, data_dim)`` and ``converged`` a ``(batch,)`` bool marking
+    rows whose controller reached ``t1`` within ``max_steps``.
+    Non-converged rows carry the state at ``t_final < t1`` (NOT NaN — the
+    serving tier must return *something* to the client) and the flag rides
+    back structurally on ``repro.serving.ServeResult.converged``.  For
+    single-solve diagnostics (NFE, acceptance counts, the accepted grid)
+    use :func:`solve_adaptive`, which returns the richer
+    ``(z_T, repro.AdaptiveStats)`` instead.
     """
     spec = get_solver(solver)
     _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory,

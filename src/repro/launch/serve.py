@@ -1,448 +1,49 @@
-"""Neural-SDE trajectory-sampling service (DESIGN.md §9).
+"""Neural-SDE serving CLI (DESIGN.md §9/§11).
 
-The inference driver for the paper's actual product: batched trajectory
-sampling from a trained SDE-GAN generator or Latent-SDE decoder.  The loop
-
-1. **restores a serving bundle** — the params-only checkpoint + workload/
-   config handshake that launch/train.py writes under ``<ckpt>/serving/``
-   (``repro.checkpoint.load_serving_meta``); a missing or mismatched bundle
-   dies with a named error, never a pytree shape mismatch;
-2. **AOT-compiles one sampler per batch bucket** (powers of two × device
-   count up to ``--max-batch``, via ``launch.steps.make_sample_step``) —
-   an off-size coalesced batch pads its key array up to the nearest bucket
-   instead of recompiling, and padding cannot change real rows because
-   every row is a pure function of its own PRNG key;
-3. **shards each batch over the data-parallel mesh**
-   (``distributed.sharding.data_parallel_mesh`` + the time-major layout;
-   ``--host-devices N`` simulates N CPU devices);
-4. **drives a request-coalescing queue**: pending requests are packed into
-   full batches FIFO, each request's trajectories are keyed off its seed,
-   and the loop reports trajectories/sec and p50/p99 request latency.
-
-Sampling routes through ``repro.solve()`` — every registered solver ×
-noise type is servable (``--solver``, ``--pallas``).  ``--stream-chunks K``
-(SDE-GAN) solves the horizon in K time chunks through one compiled chunk
-program (traced start time) and emits each chunk as it completes — long
-horizons get first-chunk latency, not full-horizon.
-
-The leftover transformer-LM decode loop from the seed scaffold lives
-behind ``--workload lm`` and imports ``repro.models``/``repro.configs``
-only there — SDE serving never touches the transformer stack.
+A thin argparse front-end over the public :mod:`repro.serving` API —
+restore/bucket/mesh/scheduling all live in the package; this module only
+parses flags, plus hosts the quarantined transformer-LM decode loop from
+the seed scaffold (``--workload lm`` — the only place serve.py touches
+``repro.models``/``repro.configs``).
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --workload sde-gan \
         --host-devices 2 --smoke
+    PYTHONPATH=src python -m repro.launch.serve --workload sde-gan \
+        --scheduler continuous --requests 24
     PYTHONPATH=src python -m repro.launch.serve --workload latent-sde \
         --ckpt-dir /tmp/ckpt --requests 64 --max-batch 32
+
+Back-compat: the names PR 4-6 exposed here (``Request``,
+``synthetic_requests``, ``serve_buckets``, ``restore_for_serving``,
+``serve_sde``, ``_coalesce``, ``_compile_pool``, ``_batch_loop``,
+``_percentile``) are re-exported from :mod:`repro.serving`.
 """
 
 from __future__ import annotations
 
 import argparse
-import collections
-import contextlib
-import dataclasses
-import tempfile
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .. import checkpoint as ckpt
-from ..distributed.compat import set_mesh
-from ..distributed.sharding import data_parallel_mesh
-from .steps import SERVE_WORKLOADS, make_sample_step, make_stream_chunk_step
-
-_PAD_SEED = 0x5EED_0DD  # keys for bucket-padding rows (rows are discarded)
-
-
-# -----------------------------------------------------------------------------
-# checkpoint handshake
-# -----------------------------------------------------------------------------
-
-
-def _build_cfg(workload: str, config: dict):
-    """Rebuild the model config dataclass from the bundle's JSON dict."""
-    from ..core.sde import LatentSDEConfig, NeuralSDEConfig
-
-    cls = NeuralSDEConfig if workload == "sde-gan" else LatentSDEConfig
-    d = dict(config)
-    d["dtype"] = jnp.dtype(d.get("dtype", "float32"))
-    try:
-        return cls(**d)
-    except TypeError as e:
-        raise ValueError(
-            f"serving bundle config does not match {cls.__name__} — written "
-            f"by an incompatible code version ({e})") from e
-
-
-def _init_params(workload: str, cfg, seed: int):
-    """Parameter template (and fresh-init values) for a workload's bundle."""
-    from ..core.sde import generator_init, latent_sde_init
-
-    key = jax.random.PRNGKey(seed)
-    if workload == "sde-gan":
-        return generator_init(key, cfg)  # serving needs the generator only
-    return latent_sde_init(key, cfg)
-
-
-def _fresh_cfg(workload: str, args):
-    """Smoke-mode config from the CLI flags (no checkpoint to read one from)."""
-    from ..core.sde import LatentSDEConfig, NeuralSDEConfig
-
-    num_steps = 16 if args.sde_steps is None else args.sde_steps
-    exact = args.solver == "reversible_heun"
-    if workload == "sde-gan":
-        return NeuralSDEConfig(
-            data_dim=1, hidden_dim=16, noise_dim=4, width=32,
-            num_steps=num_steps, solver=args.solver, exact_adjoint=exact,
-            use_pallas_kernels=args.pallas)
-    return LatentSDEConfig(
-        data_dim=2, hidden_dim=16, context_dim=16, width=32,
-        num_steps=num_steps, solver=args.solver, exact_adjoint=exact,
-        use_pallas_kernels=args.pallas)
-
-
-def restore_for_serving(workload: str, ckpt_dir: str):
-    """Handshake + restore: ``(params, cfg, step)`` from a serving bundle."""
-    meta, step = ckpt.load_serving_meta(ckpt_dir)
-    if meta.get("workload") != workload:
-        raise ValueError(
-            f"serving bundle under {ckpt_dir} was trained for workload "
-            f"{meta.get('workload')!r}, not {workload!r} — point --ckpt-dir "
-            f"at a matching run or change --workload")
-    cfg = _build_cfg(workload, meta.get("config", {}))
-    params, step = ckpt.restore_serving_bundle(
-        ckpt_dir, _init_params(workload, cfg, 0))
-    return params, cfg, step
-
-
-# -----------------------------------------------------------------------------
-# request queue
-# -----------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Request:
-    """One client ask: ``size`` trajectories keyed off ``seed``.
-
-    ``rtol`` is only consumed by the adaptive terminal-sampling mode
-    (``--adaptive``): the accuracy the client requests for its samples.
-    """
-
-    rid: int
-    size: int
-    seed: int
-    rtol: float = 1e-3
-
-
-#: Tolerances the synthetic adaptive request stream cycles through — all
-#: served by the SAME compiled program per bucket (rtol is traced).
-_SYNTH_RTOLS = (1e-2, 3e-3, 1e-3, 3e-4)
-
-
-def synthetic_requests(n: int, max_size: int, seed: int,
-                       adaptive: bool = False):
-    """Deterministic request stream (sizes cycle 1..max_size, seeds unique;
-    with ``adaptive`` the per-request tolerance cycles :data:`_SYNTH_RTOLS`)."""
-    return collections.deque(
-        Request(rid=i, size=1 + (i * 7 + seed) % max_size,
-                seed=seed * 100_003 + i,
-                rtol=_SYNTH_RTOLS[i % len(_SYNTH_RTOLS)] if adaptive else 1e-3)
-        for i in range(n))
-
-
-def serve_buckets(max_batch: int, shard_base: int):
-    """Bucket sizes: shard_base × powers of two, up to ``max_batch``.
-
-    ``shard_base`` is the device count when a mesh is active (every bucket
-    must divide exactly for the data-parallel in_sharding), else 1.  The
-    largest bucket caps how many rows one coalesced batch may hold.
-    """
-    sizes = []
-    b = max(shard_base, 1)
-    while b <= max_batch:
-        sizes.append(b)
-        b *= 2
-    if not sizes:
-        raise ValueError(
-            f"--max-batch {max_batch} is below the shard base {shard_base}; "
-            f"the smallest servable bucket is one row per device")
-    return sizes
-
-
-def _request_keys(requests, pad_to: int):
-    """Key array for a coalesced batch: per-request seeds fanned out per
-    row, padded to the bucket size with throwaway keys."""
-    parts = [
-        jax.vmap(lambda j, s=r.seed: jax.random.fold_in(
-            jax.random.PRNGKey(s), j))(jnp.arange(r.size))
-        for r in requests
-    ]
-    used = sum(r.size for r in requests)
-    if pad_to > used:
-        parts.append(jax.vmap(lambda j: jax.random.fold_in(
-            jax.random.PRNGKey(_PAD_SEED), j))(jnp.arange(pad_to - used)))
-    return jnp.concatenate(parts, axis=0)
-
-
-def _percentile(xs, q: float) -> float:
-    xs = sorted(xs)
-    idx = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
-    return xs[idx]
-
-
-# -----------------------------------------------------------------------------
-# the service loop
-# -----------------------------------------------------------------------------
-
-
-def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
-              max_batch: int, requests: int, request_max: int,
-              latent_mode: str = "prior", obs_len: int = 9,
-              stream_chunks: int = 0, adaptive: bool = False,
-              atol: float = 1e-6, seed: int = 0, args=None) -> dict:
-    """Run the trajectory-sampling service; returns the stats dict it prints.
-
-    With ``--smoke`` and no ``--ckpt-dir``, a fresh-initialised model is
-    saved to (and restored from) a throwaway serving bundle — the same
-    restore path a trained checkpoint takes, exercised end to end.
-    """
-    if workload not in SERVE_WORKLOADS:
-        raise ValueError(f"serve_sde serves {SERVE_WORKLOADS}, got {workload!r}")
-    if adaptive and workload != "sde-gan":
-        raise ValueError(
-            "--adaptive serves terminal samples from the SDE-GAN generator; "
-            "the latent-sde decoders serve whole trajectories, which have no "
-            "fixed output grid under adaptive stepping")
-    if adaptive and stream_chunks > 1:
-        raise ValueError(
-            "--adaptive and --stream-chunks are mutually exclusive: "
-            "streaming emits a fixed per-chunk grid, adaptive solving "
-            "chooses its own")
-    if requests < 1 or request_max < 1:
-        raise ValueError(
-            f"--requests ({requests}) and --request-max ({request_max}) "
-            f"must both be >= 1 — an empty queue has no latency to report")
-    if ckpt_dir is None:
-        if not smoke:
-            raise ValueError("--ckpt-dir is required without --smoke (a "
-                             "production service has a trained model)")
-        ckpt_dir = tempfile.mkdtemp(prefix="repro-serve-smoke-")
-        cfg = _fresh_cfg(workload, args)
-        ckpt.save_serving_bundle(ckpt_dir, 0, _init_params(workload, cfg, seed),
-                                 workload, cfg)
-        print(f"[serve] --smoke: fresh {workload} bundle at {ckpt_dir}",
-              flush=True)
-    params, cfg, step = restore_for_serving(workload, ckpt_dir)
-    print(f"[serve] restored {workload} serving bundle (train step {step}, "
-          f"solver={cfg.solver}, num_steps={cfg.num_steps})", flush=True)
-
-    n_dev = len(jax.devices())
-    mesh = data_parallel_mesh()
-    if mesh is not None and max_batch < n_dev:
-        # a bucket must hold >= one row per device to shard; a tiny
-        # --max-batch on a big host serves unsharded instead of dying
-        print(f"[serve] --max-batch {max_batch} < {n_dev} devices — "
-              f"serving unsharded", flush=True)
-        mesh = None
-    buckets = serve_buckets(max_batch, n_dev if mesh is not None else 1)
-    request_max = min(request_max, buckets[-1])
-    mesh_ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
-
-    stats: dict = {"workload": workload, "restored_step": step,
-                   "buckets": buckets, "devices": n_dev}
-    with mesh_ctx:
-        if mesh is not None:
-            print(f"[serve] data-parallel over {n_dev} devices", flush=True)
-        if adaptive:
-            _adaptive_terminal_loop(cfg, params, buckets, requests,
-                                    request_max, atol, seed, stats)
-        elif stream_chunks > 1:
-            _stream_loop(workload, cfg, params, buckets, requests,
-                         request_max, stream_chunks, seed, stats)
-        else:
-            _batch_loop(workload, cfg, params, buckets, requests, request_max,
-                        latent_mode, obs_len, seed, stats)
-    return stats
-
-
-def _compile_pool(sampler, params, buckets, *example_args, tag: str = ""):
-    """AOT-compile the sampler once per bucket shape.
-
-    ``example_args``: extra example operands after ``(params, keys)`` —
-    e.g. the adaptive loop's traced-rtol scalar (shape, not value, is what
-    the compile caches on).
-    """
-    jitted = jax.jit(sampler)
-    pool = {}
-    for b in buckets:
-        keys = jax.random.split(jax.random.PRNGKey(0), b)
-        t0 = time.perf_counter()
-        pool[b] = jitted.lower(params, keys, *example_args).compile()
-        print(f"[serve] compiled {tag}bucket {b} in "
-              f"{time.perf_counter() - t0:.2f}s", flush=True)
-    return pool
-
-
-def _coalesce(pending, cap: int):
-    """Pop pending requests FIFO until the next one would overflow ``cap``."""
-    batch, rows = [], 0
-    while pending and rows + pending[0].size <= cap:
-        r = pending.popleft()
-        batch.append(r)
-        rows += r.size
-    return batch, rows
-
-
-def _report(tag: str, stats: dict, total_rows: int, n_batches: int,
-            latencies, wall: float) -> None:
-    tps = total_rows / max(wall, 1e-9)
-    p50, p99 = _percentile(latencies, 0.50), _percentile(latencies, 0.99)
-    stats.update(trajectories=total_rows, batches=n_batches,
-                 traj_per_s=tps, p50_s=p50, p99_s=p99)
-    print(f"[serve] {tag}: {total_rows} trajectories in {n_batches} "
-          f"batches @ {tps:.1f} traj/s", flush=True)
-    print(f"[serve] latency p50 {p50 * 1e3:.1f}ms p99 {p99 * 1e3:.1f}ms "
-          f"(n={len(latencies)} requests, closed-loop)", flush=True)
-
-
-def _batch_loop(workload, cfg, params, buckets, requests, request_max,
-                latent_mode, obs_len, seed, stats):
-    sampler = make_sample_step(workload, cfg, latent_mode=latent_mode,
-                               obs_len=obs_len)
-    pool = _compile_pool(sampler, params, buckets)
-
-    pending = synthetic_requests(requests, request_max, seed)
-    latencies, total_rows, n_batches = [], 0, 0
-    t_start = time.perf_counter()
-    while pending:
-        batch, rows = _coalesce(pending, buckets[-1])
-        bucket = next(b for b in buckets if b >= rows)
-        keys = _request_keys(batch, bucket)
-        ys = pool[bucket](params, keys)
-        jax.block_until_ready(ys)
-        t_now = time.perf_counter()
-        latencies += [t_now - t_start] * len(batch)  # closed-loop: all at t0
-        total_rows += rows
-        n_batches += 1
-    wall = time.perf_counter() - t_start
-    _report(f"{workload}" + (f"/{latent_mode}" if workload == "latent-sde"
-                             else ""),
-            stats, total_rows, n_batches, latencies, wall)
-
-
-def _adaptive_terminal_loop(cfg, params, buckets, requests, request_max,
-                            atol, seed, stats):
-    """Per-request-tolerance terminal sampling (DESIGN.md §10).
-
-    One compiled program per bucket serves EVERY tolerance — ``rtol`` is a
-    traced scalar argument of the sampler, so tolerance never enters the
-    AOT cache key.  A coalesced batch runs at the tightest tolerance of its
-    requests (over-delivering for the looser ones, never the reverse).
-    """
-    from .steps import make_adaptive_terminal_step
-
-    pool = _compile_pool(make_adaptive_terminal_step(cfg, atol=atol), params,
-                         buckets, jnp.asarray(1e-3, cfg.dtype),
-                         tag="adaptive ")
-
-    pending = synthetic_requests(requests, request_max, seed, adaptive=True)
-    latencies, total_rows, n_batches, non_converged = [], 0, 0, 0
-    rtols_served = set()
-    t_start = time.perf_counter()
-    while pending:
-        batch, rows = _coalesce(pending, buckets[-1])
-        bucket = next(b for b in buckets if b >= rows)
-        keys = _request_keys(batch, bucket)
-        batch_rtol = min(r.rtol for r in batch)  # tightest ask wins
-        rtols_served.update(r.rtol for r in batch)
-        ys, conv = pool[bucket](params, keys,
-                                jnp.asarray(batch_rtol, cfg.dtype))
-        jax.block_until_ready(ys)
-        # padding rows don't count; a real non-converged row is a sample at
-        # t_final < t1, not Y_T — report it, never ship it silently
-        non_converged += int(jnp.sum(~conv[:rows]))
-        t_now = time.perf_counter()
-        latencies += [t_now - t_start] * len(batch)
-        total_rows += rows
-        n_batches += 1
-    wall = time.perf_counter() - t_start
-    _report("sde-gan/adaptive", stats, total_rows, n_batches, latencies, wall)
-    stats["rtols_served"] = sorted(rtols_served)
-    stats["compiled_programs"] = len(pool)
-    stats["non_converged"] = non_converged
-    print(f"[serve] adaptive: {len(rtols_served)} distinct tolerances "
-          f"served by {len(pool)} compiled program(s) "
-          f"(rtol is traced — no recompiles)", flush=True)
-    if non_converged:
-        print(f"[serve] WARNING: {non_converged}/{total_rows} rows exhausted "
-              f"the adaptive step budget before t1 (served state is at "
-              f"t_final < t1) — raise max_steps or loosen the tolerance",
-              flush=True)
-
-
-def _stream_loop(workload, cfg, params, buckets, requests, request_max,
-                 stream_chunks, seed, stats):
-    """Long-horizon streaming: emit the trajectory in time chunks."""
-    from ..core.sde import generator_initial_state
-
-    if workload != "sde-gan":
-        raise ValueError("--stream-chunks streams the SDE-GAN generator "
-                         "rollout; the latent decoder serves whole "
-                         "trajectories")
-    if cfg.num_steps % stream_chunks != 0:
-        raise ValueError(
-            f"--stream-chunks ({stream_chunks}) must divide the solver "
-            f"horizon num_steps ({cfg.num_steps}) so chunks share a grid")
-    span = cfg.t1 / stream_chunks
-    steps_per_chunk = cfg.num_steps // stream_chunks
-    jit_chunk = jax.jit(make_stream_chunk_step(cfg, span, steps_per_chunk))
-    jit_init = jax.jit(lambda p, keys: generator_initial_state(p, cfg, keys))
-    # AOT-compile both programs per bucket BEFORE the clock starts — the
-    # t_start scalar is traced, so one chunk program covers every chunk
-    init_pool, chunk_pool = {}, {}
-    for b in buckets:
-        keys = jax.random.split(jax.random.PRNGKey(0), b)
-        t0 = time.perf_counter()
-        init_pool[b] = jit_init.lower(params, keys).compile()
-        x0 = init_pool[b](params, keys)
-        chunk_pool[b] = jit_chunk.lower(
-            params, keys, x0, jnp.asarray(0.0, cfg.dtype)).compile()
-        print(f"[serve] compiled stream bucket {b} in "
-              f"{time.perf_counter() - t0:.2f}s", flush=True)
-
-    pending = synthetic_requests(requests, request_max, seed)
-    latencies, first_chunk_ms, total_rows, n_batches = [], [], 0, 0
-    t_start = time.perf_counter()
-    while pending:
-        batch, rows = _coalesce(pending, buckets[-1])
-        bucket = next(b for b in buckets if b >= rows)
-        keys = _request_keys(batch, bucket)
-        x = init_pool[bucket](params, keys)
-        t_batch0 = time.perf_counter()
-        for c in range(stream_chunks):
-            ckeys = jax.vmap(
-                lambda k, c=c: jax.random.fold_in(k, 1000 + c))(keys)
-            ys_c, x = chunk_pool[bucket](params, ckeys, x,
-                                         jnp.asarray(c * span, cfg.dtype))
-            jax.block_until_ready(ys_c)  # "emitted" to the client here
-            if c == 0:
-                first_chunk_ms.append((time.perf_counter() - t_batch0) * 1e3)
-        t_now = time.perf_counter()
-        latencies += [t_now - t_start] * len(batch)
-        total_rows += rows
-        n_batches += 1
-    wall = time.perf_counter() - t_start
-    _report(f"sde-gan/stream×{stream_chunks}", stats, total_rows, n_batches,
-            latencies, wall)
-    stats["first_chunk_ms"] = sum(first_chunk_ms) / len(first_chunk_ms)
-    print(f"[serve] stream: mean first-chunk latency "
-          f"{stats['first_chunk_ms']:.1f}ms "
-          f"({steps_per_chunk}/{cfg.num_steps} steps per chunk)", flush=True)
-
+from ..serving import (  # noqa: F401  (re-exports: the PR 4-6 surface)
+    Request,
+    _adaptive_terminal_loop,
+    _batch_loop,
+    _coalesce,
+    _compile_pool,
+    _percentile,
+    _request_keys,
+    _stream_loop,
+    restore_for_serving,
+    serve_buckets,
+    serve_sde,
+    synthetic_requests,
+)
+from .steps import SERVE_WORKLOADS
 
 # -----------------------------------------------------------------------------
 # the quarantined transformer-LM decode loop (seed scaffold)
@@ -542,11 +143,17 @@ def main(argv=None):
                     help="sde-gan: stream the horizon in K time chunks "
                          "(0/1 = whole trajectories)")
     ap.add_argument("--adaptive", action="store_true",
-                    help="sde-gan: serve adaptive terminal samples at each "
-                         "request's tolerance (rtol is traced — one "
+                    help="sde-gan: serve adaptive terminal samples at the "
+                         "deadline-routed tolerance (rtol is traced — one "
                          "compiled program per bucket serves every rtol)")
     ap.add_argument("--atol", type=float, default=1e-6,
                     help="adaptive serving: absolute tolerance floor")
+    ap.add_argument("--scheduler", choices=("continuous", "fifo"),
+                    default=None,
+                    help="sde-gan: drive the continuous-batching scheduler "
+                         "(repro.serving.Scheduler) — 'fifo' runs the same "
+                         "chunked programs under the PR 4 drain-then-"
+                         "coalesce baseline for comparison")
     ap.add_argument("--solver", default="reversible_heun",
                     help="fresh-init (--smoke) solver; restored bundles "
                          "carry their own")
@@ -576,7 +183,7 @@ def main(argv=None):
                      latent_mode=args.latent_mode, obs_len=args.obs_len,
                      stream_chunks=args.stream_chunks,
                      adaptive=args.adaptive, atol=args.atol,
-                     seed=args.seed, args=args)
+                     seed=args.seed, scheduler=args.scheduler, args=args)
 
 
 if __name__ == "__main__":

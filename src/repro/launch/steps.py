@@ -393,12 +393,15 @@ def make_stream_chunk_step(cfg, span: float, num_steps: int):
     """Build the streamed-rollout chunk step for long-horizon serving:
     ``(params, keys, x0, t_start) -> (ys_chunk, xT)``.
 
-    ``t_start`` is a traced scalar, so ONE compiled program per bucket
-    serves every chunk of the horizon; launch/serve.py carries ``xT`` into
-    the next chunk and emits each ``ys_chunk`` as it completes (first-chunk
-    latency instead of full-horizon).  ``keys`` must be pre-folded per
-    chunk by the caller.  SDE-GAN generator only — the chunk carry is the
-    generator hidden state.
+    ``t_start`` is a traced scalar — or a traced ``(B,)`` per-row vector,
+    the continuous-batching form: rows admitted at different chunk
+    boundaries sit at different horizon positions yet share ONE compiled
+    program per bucket (``repro.serving.Scheduler``).  The stream loop
+    passes a scalar (every row at the same chunk); either way the serving
+    loop carries ``xT`` into the next chunk and emits each ``ys_chunk`` as
+    it completes (first-chunk latency instead of full-horizon).  ``keys``
+    must be pre-folded per chunk by the caller.  SDE-GAN generator only —
+    the chunk carry is the generator hidden state.
     """
     from ..core import sde as S
     from ..distributed.sharding import shard_time_major

@@ -1,0 +1,90 @@
+"""repro.serving — the public Neural-SDE serving API (DESIGN.md §9/§11).
+
+The production serving surface the ``launch/serve.py`` CLI is a thin
+wrapper over:
+
+- :class:`Request` / :class:`ServeResult` — the wire types.  A request
+  carries ``deadline_ms`` (its latency SLO), ``model_id`` (which registry
+  entry serves it) and an optional explicit ``rtol`` accuracy floor; a
+  result carries per-row ``converged`` so budget-exhausted adaptive rows
+  are distinguishable structurally, never only via the warning log.
+- :class:`ModelRegistry` / :class:`LoadedModel` / :func:`load_model` —
+  N named checkpoints hot-loaded in one process from ``repro-serving/v2``
+  bundles (v1 bundles upgrade transparently), with AOT compile pools
+  keyed ``(model_id, kind, bucket)``.
+- :class:`Scheduler` — the continuous-batching scheduler: chunked
+  rollouts advance through one compiled chunk program per bucket
+  (per-row traced ``t_start``), new requests join in-flight batches at
+  chunk boundaries (arrival order), and adaptive terminal
+  batches run at the deadline-routed tolerance (:func:`route_rtol`).
+- :func:`serve_sde` — the batteries-included service driver (restore,
+  mesh, buckets, drain loops) behind the CLI.
+
+Quickstart::
+
+    import repro.serving as serving
+
+    registry = serving.ModelRegistry()
+    registry.load("/path/to/ckpt")          # every bundle entry, by name
+    sched = serving.Scheduler(registry, max_batch=16, chunks=4)
+    sched.submit(serving.Request(rid=0, size=4, seed=123,
+                                 deadline_ms=250.0))
+    results = sched.run()                    # -> [ServeResult]
+
+The private helpers PR 4/5 grew inside launch/serve.py — ``_coalesce``,
+``_compile_pool``, ``_batch_loop``, ``_percentile`` — live behind this
+package now with stable names (imported below).
+"""
+
+from .registry import (  # noqa: F401
+    LoadedModel,
+    ModelRegistry,
+    load_model,
+    restore_for_serving,
+)
+from .scheduler import (  # noqa: F401
+    Scheduler,
+    latency_summary,
+    run_open_loop,
+    serve_buckets,
+)
+from .service import (  # noqa: F401
+    _adaptive_terminal_loop,
+    _batch_loop,
+    _coalesce,
+    _compile_pool,
+    _percentile,
+    _request_keys,
+    _stream_loop,
+    serve_sde,
+)
+from .types import (  # noqa: F401
+    DEADLINE_CLASSES,
+    DeadlineClass,
+    Request,
+    ServeResult,
+    deadline_class_for,
+    percentile,
+    route_rtol,
+    synthetic_requests,
+)
+
+__all__ = [
+    "DEADLINE_CLASSES",
+    "DeadlineClass",
+    "LoadedModel",
+    "ModelRegistry",
+    "Request",
+    "Scheduler",
+    "ServeResult",
+    "deadline_class_for",
+    "latency_summary",
+    "load_model",
+    "percentile",
+    "restore_for_serving",
+    "route_rtol",
+    "run_open_loop",
+    "serve_buckets",
+    "serve_sde",
+    "synthetic_requests",
+]

@@ -1,0 +1,196 @@
+"""Hot-loadable multi-model registry (DESIGN.md §11).
+
+N named checkpoints live in ONE serving process: each
+:class:`LoadedModel` is a params-only restore of one ``repro-serving/v2``
+bundle entry (v1 bundles upgrade transparently to a single ``"default"``
+entry — :func:`repro.checkpoint.load_serving_manifest`), and every
+AOT-compiled program the schedulers build is cached here keyed by
+``(model_id, kind, bucket)`` — unloading a model drops its params AND its
+compile pool, loading a new checkpoint under a fresh id never touches the
+programs already serving traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import checkpoint as ckpt
+
+
+def _build_cfg(workload: str, config: dict):
+    """Rebuild the model config dataclass from the bundle's JSON dict."""
+    from ..core.sde import LatentSDEConfig, NeuralSDEConfig
+
+    cls = NeuralSDEConfig if workload == "sde-gan" else LatentSDEConfig
+    d = dict(config)
+    d["dtype"] = jnp.dtype(d.get("dtype", "float32"))
+    try:
+        return cls(**d)
+    except TypeError as e:
+        raise ValueError(
+            f"serving bundle config does not match {cls.__name__} — written "
+            f"by an incompatible code version ({e})") from e
+
+
+def _init_params(workload: str, cfg, seed: int):
+    """Parameter template (and fresh-init values) for a workload's bundle."""
+    from ..core.sde import generator_init, latent_sde_init
+
+    key = jax.random.PRNGKey(seed)
+    if workload == "sde-gan":
+        return generator_init(key, cfg)  # serving needs the generator only
+    return latent_sde_init(key, cfg)
+
+
+@dataclasses.dataclass
+class LoadedModel:
+    """One registry entry: a named, servable checkpoint."""
+
+    model_id: str
+    workload: str
+    cfg: object
+    params: object
+    step: int = 0
+
+
+def load_model(ckpt_dir, model_id: Optional[str] = None,
+               step: Optional[int] = None) -> LoadedModel:
+    """Restore ONE named model from a serving bundle -> :class:`LoadedModel`.
+
+    ``model_id=None`` picks the bundle's sole entry (erroring by name on a
+    multi-entry bundle).  This is the public single-model loader —
+    :meth:`ModelRegistry.load` restores every entry of a bundle at once.
+    """
+    meta, _ = ckpt.load_serving_manifest(ckpt_dir)
+    entries = {m["model_id"]: m for m in meta["models"]}
+    if model_id is None:
+        if len(entries) != 1:
+            raise ValueError(
+                f"serving bundle under {ckpt_dir} carries "
+                f"{len(entries)} model entries ({sorted(entries)}); pass "
+                f"model_id= to pick one")
+        model_id = next(iter(entries))
+    if model_id not in entries:
+        raise ValueError(
+            f"serving bundle under {ckpt_dir} has no model {model_id!r} "
+            f"(entries: {sorted(entries)})")
+    entry = entries[model_id]
+    cfg = _build_cfg(entry["workload"], entry["config"])
+    params, got = ckpt.restore_serving_model(
+        ckpt_dir, _init_params(entry["workload"], cfg, 0), model_id,
+        step=step)
+    return LoadedModel(model_id, entry["workload"], cfg, params, got)
+
+
+def restore_for_serving(workload: str, ckpt_dir: str):
+    """PR 4-compatible handshake + restore: ``(params, cfg, step)``.
+
+    Single-model bundles only; the restored workload must match the asked
+    one (named mismatch, never a pytree shape error)."""
+    model = load_model(ckpt_dir)
+    if model.workload != workload:
+        raise ValueError(
+            f"serving bundle under {ckpt_dir} was trained for workload "
+            f"{model.workload!r}, not {workload!r} — point --ckpt-dir "
+            f"at a matching run or change --workload")
+    return model.params, model.cfg, model.step
+
+
+class ModelRegistry:
+    """The in-process model table: ``model_id -> LoadedModel`` plus the
+    per-model AOT compile pools.
+
+    Hot-loading contract: :meth:`load`/:meth:`register` may be called
+    while other models are serving — compiled programs are cached lazily
+    per ``(model_id, kind, bucket)``, so a new model's first batch pays
+    its compiles and nobody else's cache is invalidated.  :meth:`unload`
+    drops a model's params and every pool entry keyed to it.
+    """
+
+    def __init__(self):
+        self._models: dict = {}
+        self._pools: dict = {}  # (model_id, kind, bucket) -> compiled
+
+    # -- the model table ----------------------------------------------------
+
+    def register(self, model: LoadedModel, replace: bool = False) -> str:
+        """Add a model under its id (``replace=True`` to hot-swap — the
+        stale compile pool is dropped with the old params)."""
+        if model.model_id in self._models and not replace:
+            raise ValueError(
+                f"model {model.model_id!r} is already registered "
+                f"(ids: {sorted(self._models)}); unload it or pass "
+                f"replace=True to hot-swap")
+        if model.model_id in self._models:
+            self.unload(model.model_id)
+        self._models[model.model_id] = model
+        return model.model_id
+
+    def load(self, ckpt_dir, step: Optional[int] = None,
+             replace: bool = False) -> tuple:
+        """Restore EVERY entry of a serving bundle into the registry.
+
+        Returns the tuple of loaded model ids.  A v1 bundle contributes
+        its single upgraded ``"default"`` entry."""
+        meta, _ = ckpt.load_serving_manifest(ckpt_dir)
+        ids = []
+        for entry in meta["models"]:
+            ids.append(self.register(
+                load_model(ckpt_dir, entry["model_id"], step=step),
+                replace=replace))
+        return tuple(ids)
+
+    def unload(self, model_id: str) -> None:
+        if model_id not in self._models:
+            raise ValueError(f"model {model_id!r} is not registered "
+                             f"(ids: {sorted(self._models)})")
+        del self._models[model_id]
+        for key in [k for k in self._pools if k[0] == model_id]:
+            del self._pools[key]
+
+    def get(self, model_id: str) -> LoadedModel:
+        try:
+            return self._models[model_id]
+        except KeyError:
+            raise ValueError(
+                f"no model {model_id!r} in the registry (ids: "
+                f"{sorted(self._models)}); load a bundle or register a "
+                f"model first") from None
+
+    def ids(self) -> tuple:
+        return tuple(sorted(self._models))
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._models
+
+    # -- the compile pools --------------------------------------------------
+
+    def compiled(self, model_id: str, kind: str, bucket: int,
+                 builder: Callable, verbose: bool = True):
+        """Memoised AOT compile keyed ``(model_id, kind, bucket)``.
+
+        ``builder()`` must return the compiled program (the caller owns
+        ``jit(...).lower(...).compile()`` — the registry only owns the
+        cache and its keying).  ``kind`` names the program family
+        (``"sample"``, ``"init"``, ``"chunk"``, ``"terminal"``) so one
+        model's families never collide on a bucket size."""
+        self.get(model_id)  # unknown ids fail by name, not a silent pool
+        key = (model_id, kind, bucket)
+        if key not in self._pools:
+            t0 = time.perf_counter()
+            self._pools[key] = builder()
+            if verbose:
+                print(f"[serve] compiled {model_id}/{kind} bucket {bucket} "
+                      f"in {time.perf_counter() - t0:.2f}s", flush=True)
+        return self._pools[key]
+
+    def pool_keys(self, model_id: Optional[str] = None) -> tuple:
+        """The compile-pool keys currently cached (a model's on request)."""
+        keys = self._pools if model_id is None else [
+            k for k in self._pools if k[0] == model_id]
+        return tuple(sorted(keys))

@@ -1,0 +1,187 @@
+"""Request/result types and SLO-aware tolerance routing (DESIGN.md §11).
+
+The deadline→tolerance contract: a request carries ``deadline_ms`` — the
+latency SLO its client bought — and the service maps that deadline onto
+the loosest solver tolerance the deadline's class admits.  Because
+``rtol`` is a *traced* scalar in every adaptive sampler (DESIGN.md §10),
+the whole deadline spectrum is served by ONE compiled program per bucket;
+routing is pure Python over the class table, never a recompile.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Any, Optional
+
+#: Seed for bucket-padding rows (padding output is discarded; the rows are
+#: provably invisible to real rows — tests/test_serving.py).
+PAD_SEED = 0x5EED_0DD
+
+
+@dataclasses.dataclass
+class Request:
+    """One client ask: ``size`` trajectories (or terminal samples) keyed
+    off ``seed``.
+
+    ``deadline_ms``: the latency SLO — drives both admission priority
+    (earliest deadline first) and, for adaptive terminal sampling, the
+    served tolerance via :func:`route_rtol`.  ``math.inf`` means "no SLO"
+    (batch class).
+
+    ``model_id``: which registry entry serves this request (multi-model
+    serving; ``"default"`` matches a single-entry bundle and every
+    upgraded v1 bundle).
+
+    ``rtol``: optional *explicit* accuracy ask for adaptive terminal
+    sampling.  ``None`` (the default) lets the deadline class choose; an
+    explicit value acts as an accuracy **floor** — the batch never runs
+    looser than the tightest explicit ask it contains.
+
+    ``kind``: ``"rollout"`` (chunked trajectory, the continuous-batching
+    path) or ``"terminal"`` (adaptive terminal sample at a routed
+    tolerance).
+    """
+
+    rid: int
+    size: int
+    seed: int
+    rtol: Optional[float] = None
+    deadline_ms: float = math.inf
+    model_id: str = "default"
+    kind: str = "rollout"
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"request {self.rid}: size must be >= 1, "
+                             f"got {self.size}")
+        if self.kind not in ("rollout", "terminal"):
+            raise ValueError(f"request {self.rid}: kind must be 'rollout' "
+                             f"or 'terminal', got {self.kind!r}")
+        if self.rtol is not None and self.rtol <= 0:
+            raise ValueError(f"request {self.rid}: rtol must be positive, "
+                             f"got {self.rtol}")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What the service hands back for one :class:`Request`.
+
+    ``converged`` is a per-row bool array (length ``size``): for adaptive
+    terminal sampling, ``False`` marks rows whose controller exhausted its
+    step budget before ``t1`` — the sample is the state at ``t_final <
+    t1``, and callers can now distinguish those rows structurally instead
+    of parsing the serve loop's warning log.  Fixed-grid rollouts are
+    always fully converged.
+
+    ``rtol`` is the tolerance the batch actually ran at (the routed one —
+    possibly looser than a fixed-tolerance service would have picked,
+    never looser than the request's explicit ask).  ``samples`` carries
+    the payload when the caller asked the scheduler to collect it
+    (``(num_steps+1, size, data_dim)`` trajectories for rollouts,
+    ``(size, data_dim)`` for terminal samples), else ``None`` —
+    load-generator runs skip the host round-trip.
+    """
+
+    rid: int
+    model_id: str
+    size: int
+    converged: Any
+    latency_s: float
+    deadline_ms: float = math.inf
+    rtol: Optional[float] = None
+    samples: Any = None
+
+    @property
+    def deadline_met(self) -> bool:
+        return self.latency_s * 1e3 <= self.deadline_ms
+
+    @property
+    def num_converged(self) -> int:
+        import numpy as np
+
+        return int(np.sum(np.asarray(self.converged)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineClass:
+    """One SLO tier: requests with ``deadline_ms <= max_deadline_ms``
+    (and above the previous tier's bound) belong to it, and ``rtol`` is
+    the loosest tolerance the tier's accuracy SLO admits."""
+
+    name: str
+    max_deadline_ms: float
+    rtol: float
+
+
+#: The default SLO ladder, tightest deadline first.  A tighter deadline
+#: admits a LOOSER tolerance (the client traded accuracy for latency);
+#: an unbounded deadline gets the service's most accurate tier.  The
+#: table is ordered and contiguous: class i covers
+#: (classes[i-1].max_deadline_ms, classes[i].max_deadline_ms].
+DEADLINE_CLASSES = (
+    DeadlineClass("realtime", 50.0, 1e-2),
+    DeadlineClass("interactive", 250.0, 3e-3),
+    DeadlineClass("standard", 1000.0, 1e-3),
+    DeadlineClass("relaxed", math.inf, 3e-4),
+)
+
+
+def deadline_class_for(deadline_ms: float,
+                       classes=DEADLINE_CLASSES) -> DeadlineClass:
+    """Map a deadline onto its SLO tier (the first class that covers it)."""
+    for c in classes:
+        if deadline_ms <= c.max_deadline_ms:
+            return c
+    return classes[-1]
+
+
+def route_rtol(batch, classes=DEADLINE_CLASSES) -> float:
+    """The tolerance one coalesced batch runs at (DESIGN.md §11).
+
+    The rule: **the loosest rtol the batch's tightest deadline allows** —
+    the tightest deadline picks the SLO tier, and the tier's rtol is
+    served.  This replaces the PR 5 tightest-ask rule (min over per-
+    request rtols), which made one accuracy-hungry request slow every
+    deadline-bound request sharing its batch.  Explicit per-request
+    ``rtol`` asks survive as accuracy floors: the batch never runs looser
+    than the tightest explicit ask.  Because the scheduler coalesces
+    within a deadline class, mixing is already minimal — this function is
+    the single place the mapping lives.
+    """
+    if not batch:
+        raise ValueError("route_rtol needs a non-empty batch")
+    rtol = deadline_class_for(min(r.deadline_ms for r in batch), classes).rtol
+    explicit = [r.rtol for r in batch if r.rtol is not None]
+    if explicit:
+        rtol = min(rtol, *explicit)
+    return rtol
+
+
+def synthetic_requests(n: int, max_size: int, seed: int,
+                       adaptive: bool = False, model_id: str = "default"):
+    """Deterministic request stream (sizes cycle ``1..max_size``, seeds
+    unique).  With ``adaptive`` the stream becomes terminal-sampling
+    requests cycling through every deadline class (so one drain exercises
+    the whole routing table); otherwise rollout requests with unbounded
+    deadlines (the PR 4-compatible stream)."""
+    reqs = collections.deque()
+    for i in range(n):
+        kw = {}
+        if adaptive:
+            cls = DEADLINE_CLASSES[i % len(DEADLINE_CLASSES)]
+            dl = cls.max_deadline_ms if math.isfinite(cls.max_deadline_ms) \
+                else 10 * DEADLINE_CLASSES[-2].max_deadline_ms
+            kw = dict(kind="terminal", deadline_ms=dl)
+        reqs.append(Request(rid=i, size=1 + (i * 7 + seed) % max_size,
+                            seed=seed * 100_003 + i, model_id=model_id, **kw))
+    return reqs
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile of a non-empty sample (the repo's serving
+    latency convention since PR 4)."""
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+    return xs[idx]

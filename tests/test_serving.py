@@ -206,6 +206,31 @@ def test_serve_cli_latent_and_stream():
     assert "first-chunk latency" in r.stdout
 
 
+def test_serve_cli_scheduler_modes():
+    """--scheduler runs the continuous-batching path (and its fifo
+    baseline) through the same CLI; both report the usual latency lines
+    plus the scheduler's pool summary."""
+    for mode in ("continuous", "fifo"):
+        r = _run_serve_cli(["--workload", "sde-gan", "--scheduler", mode])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert f"scheduler-{mode}" in r.stdout
+        assert "traj/s" in r.stdout
+        assert "latency p50" in r.stdout
+        assert "admission at chunk boundaries" in r.stdout
+
+
+def test_serve_cli_scheduler_two_simulated_devices():
+    """The scheduler's re-stacked batch operands must agree with the AOT
+    input shardings under a data-parallel mesh (Scheduler._put pins both
+    sides)."""
+    r = _run_serve_cli(["--workload", "sde-gan", "--scheduler", "continuous",
+                        "--host-devices", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "data-parallel over 2 devices" in r.stdout
+    assert "scheduler-continuous" in r.stdout
+    assert "traj/s" in r.stdout
+
+
 def test_serve_cli_adaptive_per_request_tolerance():
     """--adaptive terminal sampling: several distinct request tolerances
     must be served by exactly one compiled program per bucket (rtol is
