@@ -4,6 +4,17 @@ Fixes the paper's test problem (differentiate a small Neural SDE) and
 compares optimise-then-discretise gradients against discretise-then-optimise
 per solver and step size.  The reversible Heun method must be exact to
 floating-point error; midpoint/Heun carry O(h^p) truncation error.
+
+Also gates the two new gradient backends (DESIGN.md §12):
+
+* ``checkpoint`` — recursive binomial checkpointing must match discretise
+  gradients to <= 1e-10 for EVERY solver (they are the same discrete
+  gradients, rematerialised), while the compiled backward's temp buffers
+  follow the O(log n) schedule model (``checkpoint_schedule``) instead of
+  discretise's O(n) — asserted against XLA's ``memory_analysis()``.
+* ``bf16_compute`` — the low-precision field-eval policy must move
+  gradients by a pinned *nonzero but bounded* amount: zero would mean the
+  cast never happened, large would mean accumulation degraded too.
 """
 
 from __future__ import annotations
@@ -82,14 +93,99 @@ def gradient_error(solver: str, num_steps: int, key=None, dtype=jnp.float64):
     return relative_l1(g_otd, g_dto)
 
 
+def checkpoint_error(solver: str, num_steps: int, key=None,
+                     dtype=jnp.float64):
+    """Relative L1 error of checkpoint-mode vs discretise-mode gradients.
+
+    Both are discretise-then-optimise derivations of the SAME discrete
+    trajectory — checkpointing only changes what is stored vs recomputed —
+    so the error must sit at floating-point noise for every solver.
+    """
+    from repro.core.solve import solve
+
+    key = jax.random.PRNGKey(0) if key is None else key
+    params, drift, diffusion, z0, bm = build_problem(key, dtype=dtype)
+
+    def loss(mode, save_traj):
+        def f(p, z):
+            out = solve(drift, diffusion, p, z, bm, 0.0, 1.0, num_steps,
+                        solver=solver, gradient_mode=mode, noise="general",
+                        save_trajectory=save_traj)
+            return jnp.sum((out[-1] if save_traj else out) ** 2)
+        return f
+
+    g_dto = jax.grad(loss("discretise", True), argnums=(0, 1))(params, z0)
+    g_ckpt = jax.grad(loss("checkpoint", False), argnums=(0, 1))(params, z0)
+    return relative_l1(g_ckpt, g_dto)
+
+
+def backward_temp_bytes(mode: str, num_steps: int, key=None,
+                        dtype=jnp.float64):
+    """XLA temp-buffer bytes of the compiled gradient program, or ``None``
+    when the backend's ``memory_analysis`` does not report them."""
+    from repro.core.solve import solve
+
+    key = jax.random.PRNGKey(0) if key is None else key
+    params, drift, diffusion, z0, bm = build_problem(key, dtype=dtype)
+
+    def loss(p):
+        zT = solve(drift, diffusion, p, z0, bm, 0.0, 1.0, num_steps,
+                   solver="heun", gradient_mode=mode, noise="general",
+                   save_trajectory=False)
+        return jnp.sum(zT ** 2)
+
+    compiled = jax.jit(jax.grad(loss)).lower(params).compile()
+    try:
+        temp = compiled.memory_analysis().temp_size_in_bytes
+    except (AttributeError, NotImplementedError):
+        return None
+    return int(temp)
+
+
+def bf16_gradient_shift(solver: str = "heun", num_steps: int = 16,
+                        key=None):
+    """Relative L1 shift of ``precision="bf16_compute"`` gradients vs
+    ``"highest"`` — the pinned-tolerance gate for the precision policy."""
+    from repro.core.solve import solve
+
+    key = jax.random.PRNGKey(0) if key is None else key
+    params, drift, diffusion, z0, bm = build_problem(key, dtype=jnp.float64)
+
+    def loss(precision):
+        def f(p):
+            zT = solve(drift, diffusion, p, z0, bm, 0.0, 1.0, num_steps,
+                       solver=solver, gradient_mode="checkpoint",
+                       noise="general", save_trajectory=False,
+                       precision=precision)
+            return jnp.sum(zT ** 2)
+        return f
+
+    g_hi = jax.grad(loss("highest"))(params)
+    g_lo = jax.grad(loss("bf16_compute"))(params)
+    return relative_l1(g_lo, g_hi)
+
+
 PRESET_STEPS = {
     "tiny": [1, 4, 16],
     "quick": [1, 4, 16, 64],
     "full": [1, 4, 16, 64, 256, 1024],
 }
 
+CHECKPOINT_ERR_GATE = 1e-10
+# bf16 mantissa is 8 bits: per-step field error ~2^-8; accumulated relative
+# gradient shift on this problem sits ~1e-3.  Gate generously above that
+# but far below "accumulation degraded" (which would be O(1)), and strictly
+# above zero (zero ⇒ the cast silently never happened).
+BF16_SHIFT_BOUNDS = (1e-6, 0.2)
+# measured-vs-model slack for the temp-byte gate (constant-factor headroom
+# for XLA scratch that is not a solver carry)
+MEM_MODEL_SLACK = 2.0
+
 
 def main(preset: str = "full"):
+    from repro.core.gradients import checkpoint_schedule
+    from repro.core.solve import SOLVERS
+
     jax.config.update("jax_enable_x64", True)
     steps_list = PRESET_STEPS[preset]
     rows = []
@@ -98,6 +194,64 @@ def main(preset: str = "full"):
             err = gradient_error(solver, n)
             rows.append(("gradient_error", f"{solver},steps={n}", err))
             print(f"gradient_error,{solver},steps={n},{err:.3e}", flush=True)
+
+    # -- checkpoint backend: exact for every registered solver ---------------
+    for solver in sorted(SOLVERS):
+        for n in steps_list:
+            err = checkpoint_error(solver, n)
+            rows.append(("gradient_error",
+                         f"{solver},checkpoint,steps={n}", err))
+            print(f"gradient_error,{solver},checkpoint,steps={n},"
+                  f"{err:.3e}", flush=True)
+            assert err <= CHECKPOINT_ERR_GATE, (
+                f"checkpoint gradients for {solver} at steps={n} drifted "
+                f"{err:.3e} from discretise (gate {CHECKPOINT_ERR_GATE:g}) "
+                f"— the rematerialised backward no longer replays the same "
+                f"discrete steps")
+
+    # -- checkpoint memory: measured temp bytes follow the O(log n) model ----
+    temps = {}
+    for n in steps_list:
+        sched = checkpoint_schedule(n)
+        rows.append(("gradient_error",
+                     f"checkpoint,peak_live_states,steps={n}",
+                     sched["peak_live_states"]))
+        for mode in ("discretise", "checkpoint"):
+            t = backward_temp_bytes(mode, n)
+            if t is not None:
+                temps[(mode, n)] = t
+                rows.append(("gradient_error",
+                             f"{mode},temp_bytes,steps={n}", t))
+                print(f"gradient_error,{mode},temp_bytes,steps={n},{t}",
+                      flush=True)
+    n_lo, n_hi = steps_list[1], steps_list[-1]
+    if ("checkpoint", n_hi) in temps and ("checkpoint", n_lo) in temps:
+        grow = temps[("checkpoint", n_hi)] / max(temps[("checkpoint", n_lo)], 1)
+        model = (checkpoint_schedule(n_hi)["peak_live_states"]
+                 / checkpoint_schedule(n_lo)["peak_live_states"])
+        assert grow <= model * MEM_MODEL_SLACK, (
+            f"checkpoint backward temp bytes grew {grow:.2f}x from "
+            f"steps={n_lo} to steps={n_hi}; the O(log n) schedule model "
+            f"allows {model:.2f}x (x{MEM_MODEL_SLACK:g} slack) — residuals "
+            f"are being stored per-step again")
+        if n_hi >= 16:
+            assert temps[("checkpoint", n_hi)] < temps[("discretise", n_hi)], (
+                f"checkpoint backward stores {temps[('checkpoint', n_hi)]} "
+                f"temp bytes at steps={n_hi}, not less than discretise's "
+                f"{temps[('discretise', n_hi)]} — checkpointing saves "
+                f"nothing")
+
+    # -- bf16 precision policy: nonzero but bounded gradient shift -----------
+    shift = bf16_gradient_shift()
+    rows.append(("gradient_error", "bf16_compute,heun,steps=16", shift))
+    print(f"gradient_error,bf16_compute,heun,steps=16,{shift:.3e}",
+          flush=True)
+    lo, hi = BF16_SHIFT_BOUNDS
+    assert lo < shift < hi, (
+        f"bf16_compute gradient shift {shift:.3e} outside ({lo:g}, {hi:g}) "
+        f"— below means the compute-dtype cast silently stopped happening, "
+        f"above means gradient accumulation degraded to bf16 too")
+
     jax.config.update("jax_enable_x64", False)
     return rows
 

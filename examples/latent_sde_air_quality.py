@@ -8,7 +8,14 @@ forward per step, Adam per the paper, and a choice of adjoint —
   adjoint; add ``--pallas`` to run the diagonal-noise hot loop through the
   fused kernels (compiled on TPU, the jnp oracle elsewhere);
 * ``--backsolve``: the Li et al. continuous-adjoint baseline (midpoint,
-  O(√h) gradient error) the paper improves on.
+  O(√h) gradient error) the paper improves on;
+* ``--gradient-mode checkpoint``: recursive binomial checkpointing —
+  gradients exact to floating point at O(log n) memory, for any solver
+  (DESIGN.md §12).  ``--gradient-mode`` also accepts ``exact``/
+  ``backsolve`` as spellings of the flags above.
+
+``--precision bf16_compute`` evaluates the drift/diffusion fields in
+bfloat16 while state and gradient accumulation stay float32.
 
 ``--sde-steps`` is validated against the data grid up front: the dataset
 has 24 hourly observations (T = 23 intervals), so any positive multiple of
@@ -50,16 +57,26 @@ def main(argv=None):
                      const="backsolve",
                      help="continuous-adjoint baseline (midpoint, O(√h) "
                           "gradient error)")
+    adj.add_argument("--gradient-mode", dest="adjoint",
+                     choices=("exact", "backsolve", "checkpoint"),
+                     help="gradient derivation by name; 'checkpoint' = "
+                          "recursive binomial checkpointing (exact "
+                          "gradients, O(log n) memory, any solver)")
     ap.add_argument("--pallas", action="store_true",
                     help="fuse the diagonal-noise reversible-Heun hot loop "
                          "(requires the exact adjoint)")
+    ap.add_argument("--precision", choices=("highest", "bf16_compute"),
+                    default="highest",
+                    help="field-eval compute policy for every solve "
+                         "(bf16_compute keeps accumulation in float32)")
     args = ap.parse_args(argv)
 
-    solver = "reversible_heun" if args.adjoint == "exact" else "midpoint"
+    solver = "midpoint" if args.adjoint == "backsolve" else "reversible_heun"
     cfg = LatentSDEConfig(data_dim=2, hidden_dim=16, context_dim=16, width=32,
                           num_steps=args.sde_steps, solver=solver,
                           exact_adjoint=args.adjoint == "exact",
-                          kl_weight=0.1, use_pallas_kernels=args.pallas)
+                          kl_weight=0.1, use_pallas_kernels=args.pallas,
+                          precision=args.precision)
     key = jax.random.PRNGKey(0)
     params = latent_sde_init(key, cfg)
     oi, ou = make_latent_sde_optimizer(lr=1e-3)

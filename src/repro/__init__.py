@@ -33,10 +33,12 @@ repro.launch (mesh / dryrun / train / serve).
 
 from .core.solve import (  # noqa: F401
     GRADIENT_MODES,
+    PRECISION_POLICIES,
     SOLVERS,
     AdaptiveStats,
     SolverSpec,
     available_solvers,
+    gradient_capabilities,
     solve,
     solve_adaptive,
     solve_batched,

@@ -12,12 +12,21 @@ from .brownian_interval import BrownianInterval, HostVirtualBrownianTree  # noqa
 from .clipping import clip_lipschitz, clip_linear, clip_mlp, lipschitz_bound_mlp  # noqa: F401
 from .losses import signature, signature_mmd, time_augment, wasserstein_losses  # noqa: F401
 from .paths import LinearPathControl  # noqa: F401
+from .gradients import (  # noqa: F401
+    GRADIENT_BACKENDS,
+    GradientBackend,
+    PrecisionPolicy,
+    checkpoint_schedule,
+    register_backend,
+    resolve_precision,
+)
 from .solve import (  # noqa: F401
     GRADIENT_MODES,
     SOLVERS,
     SolverSpec,
     available_solvers,
     get_solver,
+    gradient_capabilities,
     register_solver,
     solve,
     solve_batched,

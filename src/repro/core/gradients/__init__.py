@@ -1,0 +1,51 @@
+"""Stepper-generic gradient backends for the SDE solve stack.
+
+Importing this package registers the four built-in backends (in the
+user-facing inventory order); :mod:`repro.core.solve` joins them against
+the solver registry.  See :mod:`repro.core.gradients.base` for the
+protocol and the precision policy.
+"""
+
+from .base import (
+    GRADIENT_BACKENDS,
+    PRECISION_POLICIES,
+    GradientBackend,
+    PrecisionPolicy,
+    available_gradient_modes,
+    get_backend,
+    register_backend,
+    resolve_precision,
+)
+
+# registration order == inventory order (keeps the classic three first so
+# GRADIENT_MODES stays a superset-extension of its pre-refactor value)
+from . import discretise as _discretise  # noqa: F401  (registers "discretise")
+from .reversible import (
+    reversible_heun_solve,
+    reversible_heun_solve_adaptive,
+    reversible_heun_solve_final,
+)
+from .continuous import continuous_adjoint_solve
+from .checkpoint import (
+    checkpoint_schedule,
+    checkpoint_solve,
+    checkpoint_solve_adaptive,
+)
+
+__all__ = [
+    "GRADIENT_BACKENDS",
+    "PRECISION_POLICIES",
+    "GradientBackend",
+    "PrecisionPolicy",
+    "available_gradient_modes",
+    "checkpoint_schedule",
+    "checkpoint_solve",
+    "checkpoint_solve_adaptive",
+    "continuous_adjoint_solve",
+    "get_backend",
+    "register_backend",
+    "resolve_precision",
+    "reversible_heun_solve",
+    "reversible_heun_solve_adaptive",
+    "reversible_heun_solve_final",
+]

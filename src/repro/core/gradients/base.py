@@ -1,0 +1,151 @@
+"""Gradient-backend protocol + registry, and the solve-stack precision policy.
+
+A :class:`GradientBackend` packages one *gradient path* through an SDE
+solve as data: how the forward pass stores (or avoids storing) residuals,
+and which backward rule consumes them.  ``SolverSpec.gradient_modes`` names
+backends from this registry, so "which solver serves which gradient mode"
+is a join over two tables — the front-end (:mod:`repro.core.solve`)
+validates the pair eagerly and then dispatches to the backend, never to a
+mode-string ``if``-chain.
+
+The four built-in backends (registered by :mod:`repro.core.gradients`'s
+submodules, in this order):
+
+==================== ======================= ==========================
+mode                 residual policy          backward rule
+==================== ======================= ==========================
+discretise           O(n) activations (scan)  JAX AD through the scan
+reversible_adjoint   O(1): terminal state     algebraic reversal (Alg. 2)
+continuous_adjoint   O(1): terminal value     adjoint SDE backsolve (eq. 6)
+checkpoint           O(log n): segment roots  recursive rematerialisation
+==================== ======================= ==========================
+
+The precision policy rides the same layer: :func:`resolve_precision` maps
+``precision="highest" | "bf16_compute"`` to a :class:`PrecisionPolicy`
+whose ``wrap_fields`` casts vector-field *evaluation* to the compute dtype
+while keeping solver state and adjoint accumulators in the state dtype
+(the casts are linear, so cotangents come back up-cast — accumulation
+never happens in bf16).  Because the wrap happens before any backend sees
+the fields, every backend is mixed-precision-capable by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "GRADIENT_BACKENDS",
+    "PRECISION_POLICIES",
+    "GradientBackend",
+    "PrecisionPolicy",
+    "available_gradient_modes",
+    "get_backend",
+    "register_backend",
+    "resolve_precision",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientBackend:
+    """Registry entry describing one gradient path through a solve.
+
+    Attributes:
+        name: registry key (the ``gradient_mode=`` string).
+        summary: one-line description (surfaced in error messages and the
+            README inventory).
+        terminal_only: the backward rule consumes a terminal-value
+            cotangent only (``save_trajectory=True`` is rejected).
+        supports_adaptive: the backend can differentiate (or at least run)
+            an adaptive accepted-grid solve.
+        solve: ``(spec, drift, diffusion, params, z0, bm, t0, t1,
+            num_steps, *, noise, save_trajectory, use_pallas)`` fixed-grid
+            entry point; returns the trajectory or terminal value.
+        solve_adaptive: ``(spec, drift, diffusion, params, z0, bm, rtol,
+            atol, t0, t1, max_steps, dt0, *, noise, use_pallas,
+            bridge_depth) -> (z_T, converged)`` adaptive entry point, or
+            ``None`` when ``supports_adaptive`` is False.
+        validate: backend-specific eager checks, called by the front-end
+            after its generic ones; raises ``ValueError`` with a named
+            reason.  ``None`` means no extra constraints.
+    """
+
+    name: str
+    summary: str
+    terminal_only: bool
+    supports_adaptive: bool
+    solve: Callable
+    solve_adaptive: Optional[Callable] = None
+    validate: Optional[Callable] = None
+
+
+#: gradient_mode -> GradientBackend, in registration order (the order is
+#: the user-facing inventory order, so keep the classic three first).
+GRADIENT_BACKENDS: dict = {}
+
+
+def register_backend(backend: GradientBackend) -> GradientBackend:
+    """Add (or replace) a gradient backend in the registry."""
+    if backend.supports_adaptive and backend.solve_adaptive is None:
+        raise ValueError(
+            f"{backend.name}: supports_adaptive=True needs a solve_adaptive")
+    GRADIENT_BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> GradientBackend:
+    try:
+        return GRADIENT_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown gradient_mode {name!r}; registered backends: "
+            f"{available_gradient_modes()}") from None
+
+
+def available_gradient_modes() -> Tuple[str, ...]:
+    return tuple(GRADIENT_BACKENDS)
+
+
+# =============================================================================
+# Precision policy (bf16 compute / f32 state)
+# =============================================================================
+
+PRECISION_POLICIES = ("highest", "bf16_compute")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """How vector-field evaluation relates to the solver-state dtype.
+
+    ``compute_dtype=None`` ("highest") evaluates the fields in the state
+    dtype untouched — the wrap is the identity, so the default path is
+    bitwise unchanged.  A concrete ``compute_dtype`` (bf16) down-casts
+    parameters and state *for the field evaluation only*; the output is
+    cast back to the state dtype, so the solver state, the Brownian path,
+    and every adjoint accumulator stay full-precision.
+    """
+
+    name: str
+    compute_dtype: Optional[jnp.dtype] = None
+
+    def wrap_fields(self, drift: Callable, diffusion: Callable):
+        if self.compute_dtype is None:
+            return drift, diffusion
+        from ...kernels import ops
+
+        return (ops.wrap_vector_field(drift, self.compute_dtype),
+                ops.wrap_vector_field(diffusion, self.compute_dtype))
+
+
+def resolve_precision(precision) -> PrecisionPolicy:
+    """``precision=`` string (or ready policy) -> :class:`PrecisionPolicy`."""
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    if precision == "highest":
+        return PrecisionPolicy("highest", None)
+    if precision == "bf16_compute":
+        return PrecisionPolicy("bf16_compute", jnp.bfloat16)
+    raise ValueError(
+        f"unknown precision {precision!r}; one of {PRECISION_POLICIES}")

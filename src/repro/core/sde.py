@@ -41,6 +41,8 @@ class NeuralSDEConfig:
     t1: float = 1.0
     solver: str = "reversible_heun"
     exact_adjoint: bool = True
+    gradient_mode: Optional[str] = None  # explicit backend; None = derive
+    precision: str = "highest"  # field-eval compute policy (solve stack)
     use_pallas_kernels: bool = False  # fused reversible-Heun hot loop
     dtype: object = jnp.float32
 
@@ -49,10 +51,19 @@ def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise,
                gradient_mode=None, solver=None, save_trajectory=True):
     """All SDE-GAN / Latent-SDE solves go through the unified front-end.
 
-    ``gradient_mode``/``solver`` default to the config's derivation (exact
-    reversible adjoint when configured, discretise otherwise); explicit
-    values let the Latent-SDE backsolve baseline request
-    ``"continuous_adjoint"`` without a second dispatch path.
+    ``gradient_mode``/``solver`` default to the config's derivation
+    (``cfg.gradient_mode`` when set, else exact reversible adjoint when
+    configured, discretise otherwise); explicit values let the Latent-SDE
+    backsolve baseline request ``"continuous_adjoint"`` without a second
+    dispatch path.  Terminal-only backends (``"continuous_adjoint"``,
+    ``"checkpoint"``) configured via ``cfg.gradient_mode`` pair with the
+    terminal-form objectives (:func:`latent_sde_loss_terminal`);
+    trajectory-consuming entry points surface the registry's eager named
+    error rather than silently falling back.
+
+    ``cfg.precision`` rides along unconditionally — the policy wraps the
+    vector fields inside :func:`repro.core.solve.solve`, so it composes
+    with every backend.
 
     ``use_pallas_kernels`` only applies where the fused kernels are legal:
     diagonal noise under the exact adjoint (see the registry validation in
@@ -60,6 +71,8 @@ def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise,
     (matrix) noise falls back to the unfused path with a warning.
     """
     solver = cfg.solver if solver is None else solver
+    if gradient_mode is None:
+        gradient_mode = getattr(cfg, "gradient_mode", None)
     if gradient_mode is None:
         exact = cfg.exact_adjoint and solver == "reversible_heun"
         gradient_mode = "reversible_adjoint" if exact else "discretise"
@@ -76,7 +89,8 @@ def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise,
             stacklevel=3)
     return solve(drift, diffusion, params, z0, bm, 0.0, cfg.t1, num_steps,
                  solver=solver, gradient_mode=gradient_mode, noise=noise,
-                 save_trajectory=save_trajectory, use_pallas_kernels=fuse)
+                 save_trajectory=save_trajectory, use_pallas_kernels=fuse,
+                 precision=getattr(cfg, "precision", "highest"))
 
 
 # =============================================================================
@@ -261,6 +275,8 @@ class LatentSDEConfig:
     t1: float = 1.0
     solver: str = "reversible_heun"
     exact_adjoint: bool = True
+    gradient_mode: Optional[str] = None  # explicit backend; None = derive
+    precision: str = "highest"  # field-eval compute policy (solve stack)
     kl_weight: float = 1.0
     use_pallas_kernels: bool = False  # fused diagonal-noise hot loop
     dtype: object = jnp.float32

@@ -3,27 +3,41 @@ first-class batched multi-trajectory solving.
 
 This is the `sdeint`-style surface the paper's pieces plug into
 (cf. Li et al. 2020's ``sdeint(..., method=, adjoint=)``): callers pick a
-``solver`` × ``gradient_mode`` × ``noise`` combination and
-:func:`solve` dispatches to
+``solver`` × ``gradient_mode`` × ``noise`` × ``precision`` combination and
+:func:`solve` dispatches to the matching gradient backend
+(:mod:`repro.core.gradients`):
 
 * plain ``lax.scan`` + JAX AD (``gradient_mode="discretise"``,
   discretise-then-optimise, O(N) activation memory),
 * the paper's algebraically-reversible exact adjoint
   (``"reversible_adjoint"``, O(1) memory, FP-exact gradients — §3/App. C),
 * the optimise-then-discretise continuous adjoint baseline
-  (``"continuous_adjoint"``, eq. (6), O(√h) gradient error).
+  (``"continuous_adjoint"``, eq. (6), O(√h) gradient error),
+* recursive binomial checkpointing (``"checkpoint"``, FP-exact gradients
+  at O(log n) memory / O(n log n) recompute — works for every registered
+  stepper, including the non-reversible ones and adaptive accepted grids).
 
-Every solver is described by a :class:`SolverSpec` in :data:`SOLVERS`; the
-spec carries the stepper, its algebraic inverse (when one exists), the NFE
-accounting the paper's Tables 1/4/5 report, the strong order, and which
-gradient modes / fused-kernel paths are legal.  Validation therefore
-happens *once, by data* — adding a **discretise-mode** solver means
-registering a spec, not editing dispatch chains (the spec's stepper is
-dispatched into the scan).  The two adjoint backends are not (yet)
-stepper-generic: "reversible_adjoint" is implemented for the
-reversible-Heun pair and "continuous_adjoint" for the builtin
-midpoint/heun/euler backward integrators — :func:`solve` validates this
-eagerly rather than producing another solver's numerics silently.
+Both sides of the dispatch are data.  Every solver is described by a
+:class:`SolverSpec` in :data:`SOLVERS`: the stepper, its algebraic inverse
+(when one exists), the NFE accounting the paper's Tables 1/4/5 report, the
+strong order, and which gradient modes / fused-kernel paths are legal.
+Every gradient mode is a :class:`~repro.core.gradients.GradientBackend` in
+its own registry: a forward residual policy plus a backward rule, with
+backend-specific constraints validated eagerly (``spec.gradient_modes``
+names backends, so "which solver serves which mode" is a join over the two
+tables — see :func:`gradient_capabilities`).  Adding a solver or a
+gradient path means registering a spec or a backend, not editing dispatch
+chains; an unsupported pairing raises a named error rather than producing
+another solver's numerics silently.
+
+``precision="bf16_compute"`` applies the solve-stack precision policy
+(:func:`repro.core.gradients.resolve_precision`): vector-field evaluation
+is cast to bf16 while solver state, Brownian increments, and adjoint
+accumulators stay in the state dtype.  The wrap happens before any
+backend sees the fields, so every gradient mode is mixed-precision-capable
+by construction; benchmarks/gradient_error.py gates the induced gradient
+error against a pinned tolerance.  The default ``"highest"`` is the
+identity — bitwise the pre-policy behaviour.
 
 ``use_pallas_kernels=True`` routes the reversible-Heun hot loop through the
 fused Pallas kernels (:mod:`repro.kernels.reversible_heun_step`): the
@@ -51,13 +65,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .adjoint import (
-    continuous_adjoint_solve,
-    reversible_heun_solve,
-    reversible_heun_solve_adaptive,
-    reversible_heun_solve_final,
-)
 from .brownian import BrownianPath
+from .gradients import (
+    GRADIENT_BACKENDS,
+    PRECISION_POLICIES,
+    available_gradient_modes,
+    get_backend,
+    resolve_precision,
+)
 from .solvers import (
     RevHeunState,
     _euler_maruyama_step,
@@ -68,24 +83,27 @@ from .solvers import (
     reversible_heun_embedded_step,
     reversible_heun_reverse_step,
     reversible_heun_step,
-    sde_solve,
 )
 
 __all__ = [
     "GRADIENT_MODES",
+    "PRECISION_POLICIES",
     "SOLVERS",
     "AdaptiveStats",
     "SolverSpec",
     "available_solvers",
     "get_solver",
+    "gradient_capabilities",
     "register_solver",
     "solve",
     "solve_adaptive",
     "solve_batched",
 ]
 
-#: The three gradient paths of the paper's landscape (§2.3/§2.4).
-GRADIENT_MODES = ("discretise", "reversible_adjoint", "continuous_adjoint")
+#: The registered gradient paths, in inventory order: the paper landscape's
+#: three (§2.3/§2.4) plus recursive checkpointing.  Derived from the
+#: backend registry — registering a new backend extends this tuple.
+GRADIENT_MODES = available_gradient_modes()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,10 +148,16 @@ SOLVERS: dict = {}
 
 
 def register_solver(spec: SolverSpec) -> SolverSpec:
-    """Add (or replace) a solver spec in the registry."""
+    """Add (or replace) a solver spec in the registry.
+
+    ``spec.gradient_modes`` must name registered gradient backends — the
+    join the capability table (:func:`gradient_capabilities`) is built on.
+    """
     for m in spec.gradient_modes:
-        if m not in GRADIENT_MODES:
-            raise ValueError(f"{spec.name}: unknown gradient mode {m!r}")
+        if m not in GRADIENT_BACKENDS:
+            raise ValueError(
+                f"{spec.name}: unknown gradient mode {m!r}; registered "
+                f"backends: {available_gradient_modes()}")
     if "reversible_adjoint" in spec.gradient_modes and not spec.reversible:
         raise ValueError(
             f"{spec.name}: reversible_adjoint requires a reverse_stepper")
@@ -156,63 +180,56 @@ def available_solvers() -> Tuple[str, ...]:
 register_solver(SolverSpec(
     "euler_maruyama", _euler_maruyama_step, None,
     nfe_per_step=1, strong_order=0.5,
-    gradient_modes=("discretise", "continuous_adjoint"),
+    gradient_modes=("discretise", "continuous_adjoint", "checkpoint"),
     sde_type="ito", notes="order-0.5 Itô baseline"))
 
 register_solver(SolverSpec(
     "midpoint", _midpoint_step, None,
     nfe_per_step=2, strong_order=0.5,
-    gradient_modes=("discretise", "continuous_adjoint"),
+    gradient_modes=("discretise", "continuous_adjoint", "checkpoint"),
     notes="paper's main baseline",
     embedded_stepper=_midpoint_embedded_step))
 
 register_solver(SolverSpec(
     "heun", _heun_step, None,
     nfe_per_step=2, strong_order=0.5,
-    gradient_modes=("discretise", "continuous_adjoint"),
+    gradient_modes=("discretise", "continuous_adjoint", "checkpoint"),
     notes="trapezoidal",
     embedded_stepper=_heun_embedded_step))
 
 register_solver(SolverSpec(
     "reversible_heun", reversible_heun_step, reversible_heun_reverse_step,
     nfe_per_step=1, strong_order=0.5,
-    gradient_modes=("discretise", "reversible_adjoint"),
+    gradient_modes=("discretise", "reversible_adjoint", "checkpoint"),
     supports_pallas=True,
     notes="algebraically reversible; O(1)-memory exact adjoint (paper §3)",
     embedded_stepper=reversible_heun_embedded_step))
 
 
-#: Solvers the continuous-adjoint backward integrator (adjoint.py) actually
-#: implements a time-reversed stepper for.  A registered solver outside this
-#: set would silently fall back to backward Euler — reject instead.
-_CONTINUOUS_ADJOINT_BACKWARDS = ("euler_maruyama", "midpoint", "heun")
+def gradient_capabilities() -> dict:
+    """The capability table: ``gradient_mode -> tuple of solver names``.
+
+    The join of the two registries, in backend-inventory order — this is
+    what gradient-mode error messages and the README inventory are built
+    from, so both always reflect what is actually registered.
+    """
+    return {
+        mode: tuple(s.name for s in SOLVERS.values()
+                    if mode in s.gradient_modes)
+        for mode in available_gradient_modes()
+    }
 
 
 def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
               use_pallas_kernels: bool, save_trajectory: bool,
               adaptive: bool = False) -> None:
-    if gradient_mode not in GRADIENT_MODES:
-        raise ValueError(
-            f"unknown gradient_mode {gradient_mode!r}; one of {GRADIENT_MODES}")
+    backend = get_backend(gradient_mode)  # unknown mode: lists the registry
     if gradient_mode not in spec.gradient_modes:
         raise ValueError(
             f"solver {spec.name!r} does not support gradient_mode="
-            f"{gradient_mode!r} (supported: {spec.gradient_modes})")
-    if (gradient_mode == "continuous_adjoint"
-            and spec.name not in _CONTINUOUS_ADJOINT_BACKWARDS):
-        raise ValueError(
-            f"solver {spec.name!r} declares continuous_adjoint but the "
-            f"continuous-adjoint backward integrator only implements "
-            f"{_CONTINUOUS_ADJOINT_BACKWARDS} (repro.core.adjoint); extend "
-            f"continuous_adjoint_solve before registering this combination")
-    if (gradient_mode == "reversible_adjoint"
-            and (spec.stepper is not reversible_heun_step
-                 or spec.reverse_stepper is not reversible_heun_reverse_step)):
-        raise ValueError(
-            f"solver {spec.name!r} declares reversible_adjoint but the exact "
-            f"adjoint is implemented for the reversible-Heun stepper pair "
-            f"(repro.core.adjoint); a custom reversible solver needs its own "
-            f"custom_vjp there")
+            f"{gradient_mode!r} (supported: {spec.gradient_modes}; solvers "
+            f"serving {gradient_mode!r}: "
+            f"{gradient_capabilities()[gradient_mode]})")
     if noise not in ("diagonal", "general"):
         raise ValueError(f"unknown noise type {noise!r}")
     if use_pallas_kernels:
@@ -224,21 +241,6 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
             raise ValueError(
                 "use_pallas_kernels requires diagonal noise (the fused "
                 "kernels are elementwise; general noise needs an einsum)")
-        if gradient_mode == "discretise":
-            raise ValueError(
-                "use_pallas_kernels is incompatible with gradient_mode="
-                "'discretise': the fused kernels' derivative is the "
-                "hand-derived backward kernel pair registered through the "
-                "reversible-adjoint custom_vjp, not a pallas_call VJP rule "
-                "plain AD could trace.  Use gradient_mode="
-                "'reversible_adjoint' instead — its forward pass is the "
-                "identical fused scan (so this also covers pure forward "
-                "simulation), and differentiating it runs the fused exact "
-                "adjoint")
-    if gradient_mode == "continuous_adjoint" and save_trajectory:
-        raise ValueError(
-            "continuous_adjoint backpropagates a terminal-value cotangent "
-            "only — call solve(..., save_trajectory=False)")
     if adaptive:
         if spec.embedded_stepper is None:
             raise ValueError(
@@ -254,18 +256,14 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
                 "output grid cannot represent — call solve(..., "
                 "save_trajectory=False) for the terminal value (or "
                 "solve_adaptive for the accepted-grid stats)")
-        if gradient_mode == "continuous_adjoint":
-            raise ValueError(
-                "adaptive=True is incompatible with gradient_mode="
-                "'continuous_adjoint': the eq.-(6) backward integrator "
-                "re-integrates on the forward's fixed uniform grid; use "
-                "'reversible_adjoint' (exact adjoint replaying the accepted "
-                "grid) or 'discretise' (forward simulation only)")
-        # adaptive × use_pallas_kernels is legal: the fused step kernels
-        # take dt as a traced scalar operand, so the controller's
-        # per-attempt dt flows straight into the kernels (the
-        # discretise-mode rejection above already covers the one invalid
-        # gradient mode).
+    # backend-specific constraints (terminal-only outputs, pallas
+    # compatibility, backward-integrator coverage, ...) live with the
+    # backend — adaptive × use_pallas_kernels in general is legal: the
+    # fused step kernels take dt as a traced scalar operand, so the
+    # controller's per-attempt dt flows straight into the kernels.
+    if backend.validate is not None:
+        backend.validate(spec, noise=noise, save_trajectory=save_trajectory,
+                         use_pallas=use_pallas_kernels, adaptive=adaptive)
 
 
 # =============================================================================
@@ -449,19 +447,22 @@ def solve_adaptive(
     dt0: Optional[float] = None,
     noise: str = "diagonal",
     bridge_depth: Optional[int] = None,
+    precision: str = "highest",
 ):
     """Adaptive solve returning ``(z_T, AdaptiveStats)``.
 
     The diagnostics-bearing sibling of ``solve(..., adaptive=True)``:
     benchmarks read NFE and the accepted grid off the stats.  Forward
     simulation only — for gradients call :func:`solve` with
-    ``gradient_mode="reversible_adjoint"`` (the stats buffers live inside
-    the exact adjoint's residuals there).
+    ``gradient_mode="reversible_adjoint"`` or ``"checkpoint"`` (the stats
+    buffers live inside the backend's residuals there).
     """
     spec = get_solver(solver)
     _validate(spec, "discretise", noise, False, False, adaptive=True)
     _check_adaptive_bm(bm)
     _check_bridge_depth(bm, bridge_depth)
+    drift, diffusion = resolve_precision(precision).wrap_fields(
+        drift, diffusion)
     if dt0 is None:
         dt0 = (t1 - t0) / 16
     carry, stats = _adaptive_loop(spec, drift, diffusion, params, z0, bm,
@@ -492,6 +493,7 @@ def solve(
     max_steps: Optional[int] = None,
     dt0: Optional[float] = None,
     bridge_depth: Optional[int] = None,
+    precision: str = "highest",
 ):
     """Solve ``dZ = μ_θ dt + σ_θ ∘ dW`` on ``[t0, t1]`` in ``num_steps`` steps.
 
@@ -512,13 +514,16 @@ def solve(
         t0, t1, num_steps: uniform time grid.
         solver: registry key — see :func:`available_solvers`.
         gradient_mode: "discretise" (AD through the scan, O(N) memory),
-            "reversible_adjoint" (paper's exact O(1)-memory adjoint), or
-            "continuous_adjoint" (optimise-then-discretise baseline).
+            "reversible_adjoint" (paper's exact O(1)-memory adjoint),
+            "continuous_adjoint" (optimise-then-discretise baseline), or
+            "checkpoint" (recursive binomial checkpointing: exact
+            gradients for every registered solver at O(log n) memory).
         noise: "diagonal" or "general".
         save_trajectory: return the full ``(num_steps+1, *z0.shape)``
             trajectory (index 0 is ``z0``) instead of the terminal value.
-            Must be ``False`` for "continuous_adjoint" and for adaptive
-            mode (the accepted grid is non-uniform).
+            Must be ``False`` for the terminal-only gradient modes
+            ("continuous_adjoint", "checkpoint") and for adaptive mode
+            (the accepted grid is non-uniform).
         use_pallas_kernels: fuse the reversible-Heun per-step pipeline
             through the Pallas kernels — state updates, in-kernel Brownian
             generation (fixed-grid ``BrownianPath``), and the hand-derived
@@ -534,6 +539,8 @@ def solve(
             embedded pair (every registered solver except euler_maruyama)
             and a ``bm`` with arbitrary-interval ``evaluate``.  Gradients:
             ``"reversible_adjoint"`` replays the accepted grid exactly;
+            ``"checkpoint"`` freezes the accepted grid under
+            ``stop_gradient`` and differentiates a rematerialised replay;
             ``"discretise"`` is forward-only (``lax.while_loop`` has no
             reverse-mode rule); ``"continuous_adjoint"`` is rejected.
         rtol, atol: accept tolerance (defaults 1e-3 / 1e-6) — a step is
@@ -565,6 +572,12 @@ def solve(
             Truncating the descent is a controlled approximation of the
             sample path — convergence-order studies should keep the
             default.
+        precision: "highest" (default — fields run in the state dtype,
+            bitwise the pre-policy behaviour) or "bf16_compute" (the
+            mixed-precision policy: vector-field evaluation in bf16,
+            solver state / Brownian increments / adjoint accumulators in
+            the state dtype).  Applied before the gradient backend sees
+            the fields, so it composes with every ``gradient_mode``.
 
     Returns:
         Trajectory or terminal value, differentiable w.r.t. ``params`` and
@@ -594,6 +607,13 @@ def solve(
             "but adaptive=False — pass adaptive=True (a fixed-grid solve "
             "would silently ignore the requested tolerance)")
 
+    backend = get_backend(gradient_mode)
+    # the precision policy wraps the fields BEFORE the backend sees them,
+    # so adjoint replays/backsolves evaluate the same (wrapped) fields as
+    # the forward; "highest" is the identity wrap
+    drift, diffusion = resolve_precision(precision).wrap_fields(
+        drift, diffusion)
+
     if adaptive:
         _check_adaptive_bm(bm)
         _check_bridge_depth(bm, bridge_depth)
@@ -603,45 +623,20 @@ def solve(
             max_steps = max(4 * num_steps, 256)
         if dt0 is None:
             dt0 = (t1 - t0) / num_steps
-        if gradient_mode == "reversible_adjoint":
-            z, converged = reversible_heun_solve_adaptive(
-                drift, diffusion, params, z0, bm, rtol, atol,
-                t0, t1, max_steps, dt0, noise, use_pallas_kernels,
-                bridge_depth)
-        else:
-            carry, stats = _adaptive_loop(
-                spec, drift, diffusion, params, z0, bm, t0, t1, rtol, atol,
-                max_steps, dt0, noise, use_pallas=use_pallas_kernels,
-                bridge_depth=bridge_depth)
-            z = carry.z if spec.stepper is reversible_heun_step else carry
-            converged = stats.converged
+        z, converged = backend.solve_adaptive(
+            spec, drift, diffusion, params, z0, bm, rtol, atol, t0, t1,
+            max_steps, dt0, noise=noise, use_pallas=use_pallas_kernels,
+            bridge_depth=bridge_depth)
         # a budget-exhausted solve sits at t_final < t1 — poison it rather
         # than hand back a truncated-horizon state as z_T (select-based, so
         # converged solves keep their gradient untouched); callers wanting
         # graceful access go through solve_adaptive's stats
         return jnp.where(converged, z, jnp.asarray(jnp.nan, z.dtype))
 
-    if gradient_mode == "reversible_adjoint":
-        if save_trajectory:
-            return reversible_heun_solve(
-                drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
-                use_pallas_kernels)
-        return reversible_heun_solve_final(
-            drift, diffusion, params, z0, bm, t0, t1, num_steps, noise,
-            use_pallas_kernels)
-
-    if gradient_mode == "continuous_adjoint":
-        return continuous_adjoint_solve(
-            drift, diffusion, params, z0, bm, t0, t1, num_steps,
-            solver=solver, noise=noise)
-
-    return sde_solve(
-        drift, diffusion, params, z0, bm, t0, t1, num_steps,
-        solver=solver, noise=noise, save_trajectory=save_trajectory,
-        use_pallas_kernels=use_pallas_kernels,
-        # registry-registered steppers (z-carried) dispatch through here;
-        # "reversible_heun" keeps sde_solve's carried-state fast path.
-        step_fn=None if solver == "reversible_heun" else spec.stepper)
+    return backend.solve(
+        spec, drift, diffusion, params, z0, bm, t0, t1, num_steps,
+        noise=noise, save_trajectory=save_trajectory,
+        use_pallas=use_pallas_kernels)
 
 
 def solve_batched(
@@ -689,6 +684,7 @@ def solve_batched(
               kwargs.get("use_pallas_kernels", False),
               kwargs.get("save_trajectory", True),
               kwargs.get("adaptive", False))
+    resolve_precision(kwargs.get("precision", "highest"))
 
     state_shape = z0.shape[1:]
     if kwargs.get("noise", "diagonal") == "general":

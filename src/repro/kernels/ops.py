@@ -141,3 +141,50 @@ def fused_xent(logits, labels, use_kernel: Optional[bool] = None):
     if run:
         return _xent.fused_xent(logits, labels, interpret=interp)
     return ref.fused_xent(logits, labels)
+
+
+# =============================================================================
+# Precision-policy casts (the solve stack's bf16-compute / f32-state policy)
+# =============================================================================
+#
+# These live in the dispatch layer because the compute dtype is a dispatch
+# decision of the same kind as kernel-vs-oracle: the canonical cast the
+# whole solve stack shares (repro.core.gradients.resolve_precision builds
+# on it), so a future low-precision kernel path changes one place.
+
+
+def cast_to_compute(tree, compute_dtype):
+    """Cast every inexact-float leaf of ``tree`` to ``compute_dtype``.
+
+    Integer leaves (PRNG keys, counters) pass through untouched.
+    """
+    import jax.numpy as jnp
+
+    def cast(x):
+        x = jnp.asarray(x)
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(compute_dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+def wrap_vector_field(field, compute_dtype):
+    """``(params, t, z) -> f`` evaluated in ``compute_dtype``, output cast
+    back to the state dtype.
+
+    The casts are linear, so under AD the parameter/state cotangents are
+    up-cast on the way out — gradient *accumulation* (adjoint sums, scan
+    carries, optimiser updates) stays in the state dtype; only the field
+    arithmetic itself runs low-precision.  ``t`` is left in its own dtype:
+    time resolution must not degrade with the compute policy.
+    """
+    import jax.numpy as jnp
+
+    def wrapped(params, t, z):
+        z = jnp.asarray(z)
+        out = field(cast_to_compute(params, compute_dtype), t,
+                    z.astype(compute_dtype))
+        return jnp.asarray(out).astype(z.dtype)
+
+    return wrapped

@@ -198,6 +198,11 @@ def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
       integral rides as a second state channel.  Gradients carry the
       O(√h) truncation error the paper eliminates
       (``benchmarks/latent_sde.py`` measures it).
+    * ``adjoint="checkpoint"``: recursive binomial checkpointing over the
+      same terminal-form objective — gradients exact to floating point
+      (unlike backsolve) at O(log n) memory (unlike discretise), and
+      available for EVERY registered solver, not just the reversible pair.
+      The frontier cell for non-reversible steppers; see DESIGN.md §12.
 
     All shape/config mismatches are validated **here, eagerly** — a
     misaligned solver grid or an illegal solver × adjoint × fusion cell
@@ -215,9 +220,10 @@ def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
     from ..data.synthetic import air_quality_like
     from ..distributed.sharding import shard_time_major
 
-    if adjoint not in ("exact", "backsolve"):
+    if adjoint not in ("exact", "backsolve", "checkpoint"):
         raise ValueError(
-            f"adjoint must be 'exact' or 'backsolve', got {adjoint!r}")
+            f"adjoint must be 'exact', 'backsolve', or 'checkpoint', "
+            f"got {adjoint!r}")
     if seq_len < 2:
         raise ValueError(f"seq_len must be >= 2 observations, got {seq_len}")
     validate_latent_grid(cfg.num_steps, seq_len - 1)
@@ -240,6 +246,13 @@ def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
                 "adjoint (the fused kernels have no VJP rule and the "
                 "backsolve path is plain AD over eq. (6)); drop --pallas "
                 "or use adjoint='exact'")
+    elif adjoint == "checkpoint":
+        if cfg.use_pallas_kernels:
+            raise ValueError(
+                "use_pallas_kernels requires the exact reversible-Heun "
+                "adjoint (checkpointing differentiates the rematerialised "
+                "segments by plain AD, which cannot trace a pallas_call); "
+                "drop --pallas or use adjoint='exact'")
     elif cfg.use_pallas_kernels and not (
             cfg.solver == "reversible_heun" and cfg.exact_adjoint):
         raise ValueError(
@@ -256,9 +269,10 @@ def make_latent_sde_step(cfg, opt_update, batch: int, seq_len: int,
         def elbo(p):
             if adjoint == "exact":
                 return latent_sde_loss(p, cfg, jax.random.fold_in(k, 1), ys)
+            mode = ("continuous_adjoint" if adjoint == "backsolve"
+                    else "checkpoint")
             return latent_sde_loss_terminal(
-                p, cfg, jax.random.fold_in(k, 1), ys,
-                gradient_mode="continuous_adjoint")
+                p, cfg, jax.random.fold_in(k, 1), ys, gradient_mode=mode)
 
         loss, vjp, parts = jax.vjp(elbo, params, has_aux=True)
         (grads,) = vjp(jnp.ones_like(loss))

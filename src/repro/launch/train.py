@@ -235,7 +235,7 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
                   ckpt_every: int = 50, seed: int = 0, log_every: int = 10,
                   solver: str = "reversible_heun", use_pallas: bool = False,
                   num_steps: int = 31, seq_len: int = 32,
-                  constraint: str = "clip"):
+                  constraint: str = "clip", precision: str = "highest"):
     """SDE-GAN training (paper §5) through the :func:`repro.solve` front-end.
 
     The generator sample, joint generator+discriminator solve, and CDE
@@ -255,7 +255,7 @@ def train_sde_gan(steps: int, batch: int, ckpt_dir: Optional[str] = None,
     cfg = NeuralSDEConfig(
         data_dim=1, hidden_dim=16, noise_dim=4, width=32, num_steps=num_steps,
         solver=solver, exact_adjoint=solver == "reversible_heun",
-        use_pallas_kernels=use_pallas)
+        use_pallas_kernels=use_pallas, precision=precision)
     key = jax.random.PRNGKey(seed)
     params = {"gen": generator_init(key, cfg),
               "disc": discriminator_init(jax.random.fold_in(key, 1), cfg)}
@@ -299,7 +299,7 @@ def train_latent_sde(steps: int, batch: int, ckpt_dir: Optional[str] = None,
                      solver: str = "reversible_heun", use_pallas: bool = False,
                      num_steps: int = 23, seq_len: int = 24,
                      adjoint: str = "exact", kl_weight: float = 0.1,
-                     lr: float = 1e-2):
+                     lr: float = 1e-2, precision: str = "highest"):
     """Latent-SDE (VAE) training (paper Appendix B) at parity with the
     SDE-GAN path: same data-parallel mesh machinery, checkpointing,
     straggler monitoring — and the first workload whose training hot loop
@@ -317,7 +317,7 @@ def train_latent_sde(steps: int, batch: int, ckpt_dir: Optional[str] = None,
         data_dim=2, hidden_dim=16, context_dim=16, width=32,
         num_steps=num_steps, solver=solver, kl_weight=kl_weight,
         exact_adjoint=adjoint == "exact" and solver == "reversible_heun",
-        use_pallas_kernels=use_pallas)
+        use_pallas_kernels=use_pallas, precision=precision)
     key = jax.random.PRNGKey(seed)
     params = latent_sde_init(key, cfg)
     data_key = jax.random.fold_in(key, 2)
@@ -391,6 +391,21 @@ def main(argv=None):
                          "error) instead of the exact reversible adjoint; "
                          "pairs with --solver midpoint (auto-selected if "
                          "the solver is left at reversible_heun)")
+    ap.add_argument("--adjoint", choices=("exact", "backsolve", "checkpoint"),
+                    default=None,
+                    help="latent-sde gradient derivation: 'exact' (the "
+                         "paper's reversible adjoint), 'backsolve' (same as "
+                         "--backsolve), or 'checkpoint' (recursive binomial "
+                         "checkpointing — exact gradients at O(log n) "
+                         "memory, any solver).  Default: exact, or "
+                         "backsolve when --backsolve is given")
+    ap.add_argument("--precision", choices=("highest", "bf16_compute"),
+                    default="highest",
+                    help="sde-gan/latent-sde field-eval compute policy: "
+                         "'bf16_compute' casts drift/diffusion evaluation "
+                         "to bfloat16 while gradient accumulation stays in "
+                         "the state dtype; 'highest' (default) is bitwise "
+                         "unchanged")
     ap.add_argument("--kl-weight", type=float, default=0.1,
                     help="latent-sde: ELBO KL term weight")
     ap.add_argument("--lr", type=float, default=1e-2,
@@ -417,7 +432,7 @@ def main(argv=None):
             solver=args.solver, use_pallas=args.pallas,
             num_steps=31 if args.sde_steps is None else args.sde_steps,
             seq_len=32 if args.seq_len is None else args.seq_len,
-            constraint=args.constraint)
+            constraint=args.constraint, precision=args.precision)
         if mmds:
             print(f"[sde-gan] done: first sig-MMD {mmds[0]:.4f} -> "
                   f"last {mmds[-1]:.4f}")
@@ -425,8 +440,13 @@ def main(argv=None):
             print("[sde-gan] done: no steps run")
         return
     if args.workload == "latent-sde":
+        adjoint = args.adjoint
+        if adjoint is None:
+            adjoint = "backsolve" if args.backsolve else "exact"
+        elif args.backsolve and adjoint != "backsolve":
+            ap.error(f"--backsolve conflicts with --adjoint {adjoint}")
         solver = args.solver
-        if args.backsolve and solver == "reversible_heun":
+        if adjoint == "backsolve" and solver == "reversible_heun":
             solver = "midpoint"  # the backsolve baseline's solver (paper's)
             print("[latent-sde] --backsolve: using midpoint (reversible_heun "
                   "has no continuous-adjoint backward)", flush=True)
@@ -435,9 +455,9 @@ def main(argv=None):
         _, losses = train_latent_sde(
             args.steps, args.batch, args.ckpt_dir, args.ckpt_every, args.seed,
             solver=solver, use_pallas=args.pallas,
-            num_steps=num_steps, seq_len=seq_len,
-            adjoint="backsolve" if args.backsolve else "exact",
-            kl_weight=args.kl_weight, lr=args.lr)
+            num_steps=num_steps, seq_len=seq_len, adjoint=adjoint,
+            kl_weight=args.kl_weight, lr=args.lr,
+            precision=args.precision)
         if losses:
             print(f"[latent-sde] done: first -ELBO {losses[0]:.4f} -> "
                   f"last {losses[-1]:.4f}")

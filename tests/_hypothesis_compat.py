@@ -1,0 +1,48 @@
+"""Import-or-stub shim for hypothesis: plain tests always run.
+
+The property-test modules used to ``pytest.importorskip("hypothesis")`` at
+module scope, which skipped their PLAIN tests too whenever hypothesis was
+absent (e.g. a minimal local environment).  Importing ``given``/
+``settings``/``st`` from here instead keeps the granularity per-test:
+
+* hypothesis installed (CI installs ``requirements-dev.txt``): the real
+  decorators, property tests run and are enforced;
+* hypothesis absent: each ``@given`` test is individually skip-marked with
+  a named reason, and every non-property test in the module still runs.
+
+``HAVE_HYPOTHESIS`` lets CI assert the real path was taken (the
+property-test enforcement step greps for unexpected skips).
+"""
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="property test needs hypothesis "
+                       "(pip install -r requirements-dev.txt)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """``st.<anything>(...)`` placeholder; never executed — the
+        ``@given`` wrapper above skips the test before drawing."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()

@@ -8,10 +8,9 @@ bridge conditional statistics of eq. (8).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.brownian import BrownianPath, VirtualBrownianTree
 from repro.core.brownian_interval import BrownianInterval, HostVirtualBrownianTree
@@ -222,14 +221,22 @@ def test_vbtree_grid_increments_sum_to_full_interval(seed, n):
 
 def test_dense_path_pathwise_consistent_refinement(key):
     """DenseBrownianPath: coarse increments are sums of fine ones — the
-    property strong-convergence measurement needs."""
+    property strong-convergence measurement needs.  Pinned at float64 (the
+    1e-12 tolerance is an f64 claim) — without x64 the requested dtype
+    silently truncates to float32."""
     from repro.core.brownian import DenseBrownianPath
 
-    bm = DenseBrownianPath.sample(key, 0.0, 1.0, 64, (5,), jnp.float64)
-    for n_coarse in (8, 16, 32):
-        r = 64 // n_coarse
-        for n in range(0, n_coarse, 3):
-            coarse = bm.increment(jnp.int32(n), n_coarse)
-            fine = sum(bm.increment(jnp.int32(n * r + i), 64) for i in range(r))
-            np.testing.assert_allclose(np.asarray(coarse), np.asarray(fine),
-                                       rtol=1e-12, atol=1e-12)
+    jax.config.update("jax_enable_x64", True)
+    try:
+        bm = DenseBrownianPath.sample(key, 0.0, 1.0, 64, (5,), jnp.float64)
+        for n_coarse in (8, 16, 32):
+            r = 64 // n_coarse
+            for n in range(0, n_coarse, 3):
+                coarse = bm.increment(jnp.int32(n), n_coarse)
+                fine = sum(bm.increment(jnp.int32(n * r + i), 64)
+                           for i in range(r))
+                np.testing.assert_allclose(np.asarray(coarse),
+                                           np.asarray(fine),
+                                           rtol=1e-12, atol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", False)

@@ -3,11 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+import pytest  # noqa: F401
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import optim
 from repro.core.clipping import clip_mlp

@@ -63,7 +63,7 @@ def test_every_solver_mode_combination_dispatches_or_rejects(key, solver, mode):
     params, drift, diffusion = _ou()
     z0 = jnp.ones((4, 3))
     bm = BrownianPath(key, 0.0, 1.0, (4, 3))
-    save_traj = mode != "continuous_adjoint"
+    save_traj = mode not in ("continuous_adjoint", "checkpoint")
     run = lambda: solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
                         solver=solver, gradient_mode=mode,
                         save_trajectory=save_traj)
