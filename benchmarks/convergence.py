@@ -22,6 +22,16 @@ Two experiments:
    * the exact adjoint's backward reconstruction over the accepted grid
      matches the forward states to float64 round-off, and its parameter
      gradient matches plain AD through the frozen-grid replay likewise.
+
+3. **SRK order + crossing** (DESIGN.md §13; EXPERIMENTS.md §Frontier) —
+   geometric Brownian motion with its pathwise-exact terminal value as
+   reference, on a shared ``DenseBrownianPath`` whose W leaves are
+   bitwise-identical between the space-time mode (SRK consumes (W, H))
+   and the plain mode (reversible Heun consumes W).  Gates: the SRK
+   log-log strong-error slope sits in [1.4, 1.6], and the error-vs-NFE
+   curves cross — reversible Heun (1 NFE/step, order 1.0) is more
+   accurate per evaluation at coarse budgets, SRK (5 NFE/step, order
+   1.5) past the crossover.
 """
 
 from __future__ import annotations
@@ -159,6 +169,101 @@ def frontier(preset: str):
     ]
 
 
+# -----------------------------------------------------------------------------
+# SRK strong-order gate + error-vs-NFE crossing (DESIGN.md §13)
+# -----------------------------------------------------------------------------
+
+#: GBM test problem dz = μz dt + σz dW (Itô); multiplicative noise makes
+#: the *stochastic* discretisation error dominate, which is where the
+#: order-1.5 scheme separates from order-1.0 ones.  (On the additive-noise
+#: burst above both solvers are deterministic-error-dominated at order ~2
+#: and the 5×-NFE SRK step never pays for itself.)
+SRK_MU, SRK_SIGMA = 0.7, 0.5
+SRK_FINE = 4096
+SRK_GRIDS = (8, 16, 32, 64, 128)                  # SRK: 5 NFE/step
+SRK_HEUN_GRIDS = (32, 64, 128, 256, 512, 1024)    # reversible Heun: 1 NFE/step
+PRESET_SRK_PATHS = {"tiny": 512, "quick": 1000, "full": 2000}
+
+
+def srk_frontier(preset: str):
+    """Order-1.5 slope gate + the SRK / reversible-Heun NFE crossing.
+
+    Both solvers integrate the SAME Itô SDE: SRK natively, reversible
+    Heun through the Stratonovich form (drift μ − σ²/2).  The reference
+    is the pathwise-exact terminal value ``exp((μ−σ²/2)T + σW_T)`` — no
+    fine solve, so the measured slopes are pure scheme error.  The W
+    sample paths are shared bitwise across modes: the plain-mode
+    ``DenseBrownianPath`` is built from the space-time path's own ``w``
+    leaf.
+    """
+    from repro.core.brownian import DenseBrownianPath
+    from repro.core.solve import solve
+    from repro.core.solvers import sde_solve
+
+    n_paths = PRESET_SRK_PATHS[preset]
+    key = jax.random.PRNGKey(11)
+    y0 = jnp.ones((n_paths, 1), jnp.float64)
+    bm_st = DenseBrownianPath.sample(key, 0.0, 1.0, SRK_FINE, (n_paths, 1),
+                                     jnp.float64, levy_area="space-time")
+    bm = DenseBrownianPath(bm_st.w, 0.0, 1.0)  # same W bitwise, no H
+    wT, _ = bm_st.value(1.0)
+    exact = np.asarray(jnp.exp((SRK_MU - 0.5 * SRK_SIGMA ** 2)
+                               + SRK_SIGMA * wT)[..., 0])
+
+    ito_drift = lambda p, t, z: SRK_MU * z
+    strat_drift = lambda p, t, z: (SRK_MU - 0.5 * SRK_SIGMA ** 2) * z
+    diffusion = lambda p, t, z: SRK_SIGMA * z
+
+    def err(zT):
+        return float(np.mean(np.abs(np.asarray(zT[..., 0]) - exact)))
+
+    srk_err = [err(solve(ito_drift, diffusion, None, y0, bm_st, 0.0, 1.0, n,
+                         solver="srk", save_trajectory=False))
+               for n in SRK_GRIDS]
+    heun_err = [err(sde_solve(strat_drift, diffusion, None, y0, bm, 0.0, 1.0,
+                              n, solver="reversible_heun",
+                              save_trajectory=False))
+                for n in SRK_HEUN_GRIDS]
+
+    slope = float(-np.polyfit(np.log(np.asarray(SRK_GRIDS, float)),
+                              np.log(srk_err), 1)[0])
+    srk_nfe = [5 * n for n in SRK_GRIDS]
+    heun_nfe = list(SRK_HEUN_GRIDS)  # 1 NFE/step
+    rows = [("convergence_srk", "srk_strong_order", slope)]
+    for nfe, e in zip(srk_nfe, srk_err):
+        rows.append(("convergence_srk", f"srk_err_at_nfe_{nfe}", e))
+        print(f"convergence_srk,srk,nfe={nfe},err={e:.3e}", flush=True)
+    for nfe, e in zip(heun_nfe, heun_err):
+        rows.append(("convergence_srk", f"revheun_err_at_nfe_{nfe}", e))
+        print(f"convergence_srk,revheun,nfe={nfe},err={e:.3e}", flush=True)
+
+    # log-log interpolation of both error-vs-NFE curves over the common
+    # NFE range; the crossover is where the difference changes sign
+    lo, hi = max(srk_nfe[0], heun_nfe[0]), min(srk_nfe[-1], heun_nfe[-1])
+    srk_at = lambda lnfe: np.interp(lnfe, np.log(srk_nfe), np.log(srk_err))
+    heun_at = lambda lnfe: np.interp(lnfe, np.log(heun_nfe), np.log(heun_err))
+    grid = np.linspace(np.log(lo), np.log(hi), 256)
+    diff = srk_at(grid) - heun_at(grid)
+    crossover = float(np.exp(grid[int(np.argmax(diff < 0))]))
+    print(f"convergence_srk,srk_strong_order={slope:.2f} "
+          f"(gate [1.4, 1.6]); crossover_nfe~{crossover:.0f} "
+          f"(revheun better below, srk better above)", flush=True)
+
+    assert 1.4 <= slope <= 1.6, (
+        f"SRK strong order {slope:.3f} outside the order-1.5 gate "
+        f"[1.4, 1.6] — the (W, H) pair or the tableau is wrong")
+    assert diff[0] > 0, (
+        f"reversible Heun must be more accurate per NFE at the coarse end "
+        f"(nfe={lo}): srk {np.exp(srk_at(grid[0])):.2e} vs "
+        f"revheun {np.exp(heun_at(grid[0])):.2e}")
+    assert diff[-1] < 0, (
+        f"SRK must be more accurate per NFE at the fine end (nfe={hi}): "
+        f"srk {np.exp(srk_at(grid[-1])):.2e} vs "
+        f"revheun {np.exp(heun_at(grid[-1])):.2e}")
+    rows.append(("convergence_srk", "crossover_nfe", crossover))
+    return rows
+
+
 def replay_gates():
     """Accepted-grid replay contract (float64): bitwise forward replay,
     round-off-level backward reconstruction, exact-adjoint gradient ==
@@ -269,6 +374,7 @@ def main(preset: str = "full"):
         print(f"convergence,{solver},strong_order={s_ord:.2f},"
               f"weak_order={w_ord:.2f}", flush=True)
     rows += frontier(preset)
+    rows += srk_frontier(preset)
     rows += replay_gates()
     jax.config.update("jax_enable_x64", False)
     return rows

@@ -28,14 +28,19 @@ except ImportError:  # run as a loose script
     import report
 
 
-def build_problem(key, batch=32, x_dim=32, w_dim=16, width=8, dtype=jnp.float64):
+def build_problem(key, batch=32, x_dim=32, w_dim=16, width=8,
+                  dtype=jnp.float64, noise="general", levy_area=None):
+    """The Fig.-2 Neural SDE; ``noise="diagonal"`` shrinks the diffusion
+    head to a state-shaped output and sizes the Brownian path to match
+    (``levy_area="space-time"`` for solvers that consume (W, H) pairs)."""
     from repro import nn
     from repro.core.brownian import BrownianPath
 
     kp1, kp2, kz, kw = jax.random.split(key, 4)
+    g_out = x_dim if noise == "diagonal" else x_dim * w_dim
     params = {
         "f": nn.mlp_init(kp1, [x_dim, width, x_dim], dtype=dtype),
-        "g": nn.mlp_init(kp2, [x_dim, width, x_dim * w_dim], dtype=dtype),
+        "g": nn.mlp_init(kp2, [x_dim, width, g_out], dtype=dtype),
     }
 
     def drift(p, t, x):
@@ -43,10 +48,13 @@ def build_problem(key, batch=32, x_dim=32, w_dim=16, width=8, dtype=jnp.float64)
 
     def diffusion(p, t, x):
         out = jax.nn.sigmoid(nn.mlp(p["g"], x, nn.lipswish))
+        if noise == "diagonal":
+            return out * 0.2
         return out.reshape(x.shape[:-1] + (x_dim, w_dim)) * 0.2
 
     z0 = jax.random.normal(kz, (batch, x_dim), dtype)
-    bm = BrownianPath(kw, 0.0, 1.0, (batch, w_dim), dtype)
+    bm_shape = (batch, x_dim if noise == "diagonal" else w_dim)
+    bm = BrownianPath(kw, 0.0, 1.0, bm_shape, dtype, levy_area=levy_area)
     return params, drift, diffusion, z0, bm
 
 
@@ -99,17 +107,24 @@ def checkpoint_error(solver: str, num_steps: int, key=None,
 
     Both are discretise-then-optimise derivations of the SAME discrete
     trajectory — checkpointing only changes what is stored vs recomputed —
-    so the error must sit at floating-point noise for every solver.
+    so the error must sit at floating-point noise for every solver.  The
+    problem follows the solver's capability rows: solvers without general
+    noise (srk) run the diagonal layout, on a space-time Lévy-area path
+    when the spec demands (W, H) pairs.
     """
-    from repro.core.solve import solve
+    from repro.core.solve import get_solver, solve
 
+    spec = get_solver(solver)
+    noise = "general" if "general" in spec.noise_types else "diagonal"
     key = jax.random.PRNGKey(0) if key is None else key
-    params, drift, diffusion, z0, bm = build_problem(key, dtype=dtype)
+    params, drift, diffusion, z0, bm = build_problem(
+        key, dtype=dtype, noise=noise,
+        levy_area="space-time" if spec.needs_levy_area else None)
 
     def loss(mode, save_traj):
         def f(p, z):
             out = solve(drift, diffusion, p, z, bm, 0.0, 1.0, num_steps,
-                        solver=solver, gradient_mode=mode, noise="general",
+                        solver=solver, gradient_mode=mode, noise=noise,
                         save_trajectory=save_traj)
             return jnp.sum((out[-1] if save_traj else out) ** 2)
         return f

@@ -39,7 +39,14 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="alias for --preset quick (back-compat)")
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--list-suites", action="store_true",
+                    help="print the suite names, comma-joined, and exit — "
+                         "the single source of truth CI's expect-list "
+                         "consumes (report.py --validate)")
     args = ap.parse_args(argv)
+    if args.list_suites:
+        print(",".join(SUITES))
+        return 0
     preset = "quick" if args.quick and args.preset == "full" else args.preset
 
     names = [args.only] if args.only else list(SUITES)

@@ -37,11 +37,17 @@ def main():
     x0 = jax.random.normal(kz, (8, 4), jnp.float64)
     bm = BrownianPath(kw, 0.0, 1.0, (8, 4), jnp.float64)
 
-    # --- 1. one front door, four solvers ------------------------------------
+    # --- 1. one front door, every registered solver --------------------------
+    # srk is strong-order 1.5: it consumes (W, H) space-time Lévy-area
+    # pairs, so it gets a levy_area="space-time" path (same key — the W
+    # component is bitwise the plain path's; DESIGN.md §13).
+    bm_st = BrownianPath(kw, 0.0, 1.0, (8, 4), jnp.float64,
+                         levy_area="space-time")
     for solver in repro.available_solvers():
-        traj = repro.solve(drift, diffusion, params, x0, bm, 0.0, 1.0, 64,
-                           solver=solver)
         spec = repro.SOLVERS[solver]
+        traj = repro.solve(drift, diffusion, params, x0,
+                           bm_st if spec.needs_levy_area else bm,
+                           0.0, 1.0, 64, solver=solver)
         print(f"{solver:16s} nfe/step={spec.nfe_per_step}  "
               f"X_T mean {float(traj[-1].mean()):+.4f}")
 

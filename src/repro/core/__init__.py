@@ -3,10 +3,12 @@
 from .adjoint import continuous_adjoint_solve, reversible_heun_solve  # noqa: F401
 from .brownian import (  # noqa: F401
     BrownianPath,
+    DenseBrownianPath,
     VirtualBrownianTree,
     brownian_increments,
     davie_levy_area,
     space_time_levy_area,
+    stlevy_difference,
 )
 from .brownian_interval import BrownianInterval, HostVirtualBrownianTree  # noqa: F401
 from .clipping import clip_lipschitz, clip_linear, clip_mlp, lipschitz_bound_mlp  # noqa: F401

@@ -90,6 +90,17 @@ class BrownianInterval:
     preplant_dt : if given, pre-plant a dyadic tree whose leaves are no larger
         than ``4/5 * preplant_dt * cache_size`` (App. E backward-pass remedy),
         making right-to-left sweeps O(n log n) instead of O(n^2).
+    levy_area : ``None`` (plain ``W_{s,t}`` — bitwise the historical draws)
+        or ``"space-time"``: queries return ``(W_{s,t}, H_{s,t})`` pairs,
+        the paper's §4 design point.  Internally each node carries the raw
+        time-area ``A_{a,b} = ∫_a^b (W_r - W_a) dr`` alongside ``W_{a,b}``;
+        bisection samples the left child's ``(w, A)`` jointly conditional on
+        the parent pair (exact Gaussian conditioning at an arbitrary split
+        fraction — off the midpoint the conditional cross-covariance is
+        non-zero, so ``a₁`` is drawn conditionally on the realised ``w₁``),
+        and the right child is the algebraic complement.  Combining a query's
+        node list left to right uses the chen relation
+        ``A_{s,t} = Σᵢ (aᵢ + dtᵢ · W_acc)``; ``H = A/(t-s) - W/2``.
     """
 
     def __init__(
@@ -101,11 +112,17 @@ class BrownianInterval:
         cache_size: int = 128,
         preplant_dt: Optional[float] = None,
         dtype=np.float64,
+        levy_area: Optional[str] = None,
     ):
         assert t1 > t0
+        if levy_area not in (None, "space-time"):
+            raise ValueError(
+                f"unknown levy_area mode {levy_area!r}; supported: "
+                f"(None, 'space-time')")
         self.t0, self.t1 = float(t0), float(t1)
         self.shape = tuple(shape)
         self.dtype = dtype
+        self.levy_area = levy_area
         self._root = _Node(self.t0, self.t1, seed, None)
         self._cache = _LRU(cache_size)
         self._hint: _Node = self._root
@@ -114,12 +131,20 @@ class BrownianInterval:
             self._preplant(self._root, leaf)
 
     # -- public API ----------------------------------------------------------
-    def __call__(self, s: float, t: float) -> np.ndarray:
-        """Return the exact increment ``W_t - W_s``."""
+    def __call__(self, s: float, t: float):
+        """Exact ``W_t - W_s`` — or the ``(W, H)`` pair in space-time mode."""
         if not (self.t0 <= s < t <= self.t1):
             raise ValueError(f"query [{s}, {t}] outside [{self.t0}, {self.t1}]")
         nodes = self._traverse(self._hint, s, t)
         self._hint = nodes[-1]
+        if self.levy_area == "space-time":
+            w_acc = np.zeros(self.shape, self.dtype)
+            a_acc = np.zeros(self.shape, self.dtype)
+            for n in nodes:
+                w_i, a_i = self._sample(n)
+                a_acc += a_i + (n.b - n.a) * w_acc
+                w_acc += w_i
+            return w_acc, a_acc / (t - s) - 0.5 * w_acc
         out = np.zeros(self.shape, self.dtype)
         for n in nodes:
             out += self._sample(n)
@@ -141,18 +166,71 @@ class BrownianInterval:
         g = np.random.Generator(np.random.Philox(key=seed & ((1 << 64) - 1)))
         return mean + std * g.standard_normal(self.shape).astype(self.dtype, copy=False)
 
-    def _sample(self, node: _Node) -> np.ndarray:
+    def _root_pair(self, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Unconditional ``(W, A)`` over the whole interval: ``W ~ N(0, h)``,
+        ``H ~ N(0, h/12)`` independent, ``A = h(H + W/2)``."""
+        h = self.t1 - self.t0
+        g = np.random.Generator(np.random.Philox(key=seed & ((1 << 64) - 1)))
+        w = g.normal(0.0, np.sqrt(h), size=self.shape).astype(self.dtype, copy=False)
+        hh = g.normal(0.0, np.sqrt(h / 12.0), size=self.shape).astype(self.dtype, copy=False)
+        return w, h * (hh + 0.5 * w)
+
+    def _bridge_pair(self, a: float, b: float, x: float,
+                     parent: Tuple[np.ndarray, np.ndarray],
+                     seed: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Left-child ``(w₁, A₁)`` over ``[a, x]`` conditional on the parent
+        pair over ``[a, b]`` — exact Gaussian conditioning at split fraction
+        ``θ = (x-a)/(b-a)`` (the (W, A) generalisation of eq. (8)):
+
+            E[w₁]   = (3θ² - 2θ)·w + 6θ(1-θ)·A/h        Var = hθ(1-4θ+6θ²-3θ³)
+            E[A₁]   = -hθ²(1-θ)·w + (3θ² - 2θ³)·A       Var = (h³/3)θ³(1-θ)³
+            Cov(w₁, A₁ | w, A) = h²θ²(1-θ)²(1-2θ)/2
+
+        The conditional cross-covariance vanishes only at the midpoint, so
+        ``A₁`` is sampled conditionally on the realised ``w₁``.
+        """
+        w, area = parent
+        h = b - a
+        th = (x - a) / h
+        g = np.random.Generator(np.random.Philox(key=seed & ((1 << 64) - 1)))
+        xi0 = g.standard_normal(self.shape).astype(self.dtype, copy=False)
+        xi1 = g.standard_normal(self.shape).astype(self.dtype, copy=False)
+        mean_w = (3.0 * th * th - 2.0 * th) * w + 6.0 * th * (1.0 - th) * area / h
+        var_w = h * th * (1.0 - 4.0 * th + 6.0 * th * th - 3.0 * th ** 3)
+        var_w = max(var_w, 0.0)
+        w1 = mean_w + np.sqrt(var_w) * xi0
+        mean_a = -h * th * th * (1.0 - th) * w + (3.0 * th * th - 2.0 * th ** 3) * area
+        var_a = (h ** 3 / 3.0) * th ** 3 * (1.0 - th) ** 3
+        cov = 0.5 * h * h * th * th * (1.0 - th) ** 2 * (1.0 - 2.0 * th)
+        if var_w > 0.0:
+            mean_a = mean_a + (cov / var_w) * (w1 - mean_w)
+            var_a = var_a - cov * cov / var_w
+        a1 = mean_a + np.sqrt(max(var_a, 0.0)) * xi1
+        return w1, a1
+
+    def _sample(self, node: _Node):
         cached = self._cache.get(id(node))
         if cached is not None:
             return cached
+        pairs = self.levy_area == "space-time"
         if node is self._root:
-            out = self._base_normal(node.seed, np.sqrt(self.t1 - self.t0))
+            out = (self._root_pair(node.seed) if pairs else
+                   self._base_normal(node.seed, np.sqrt(self.t1 - self.t0)))
         else:
             parent = node.parent
             w_parent = self._sample(parent)
-            if node is parent.right:
+            left = parent.left
+            if pairs:
+                w1, a1 = self._bridge_pair(parent.a, parent.b, left.b,
+                                           w_parent, left.seed)
+                if node is parent.right:
+                    # complement: W₂ = W - w₁; A₂ = A - A₁ - (b - x)·w₁
+                    wp, ap = w_parent
+                    out = (wp - w1, ap - a1 - (parent.b - left.b) * w1)
+                else:
+                    out = (w1, a1)
+            elif node is parent.right:
                 # W_{mid, b} = W_{a, b} - W_{a, mid}
-                left = parent.left
                 w_left = self._bridge(parent.a, parent.b, left.b, w_parent, left.seed)
                 out = w_parent - w_left
             else:

@@ -54,7 +54,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..solvers import RevHeunState, reversible_heun_step
+from ..brownian import stlevy_difference
+from ..solvers import RevHeunState, _tree_cast, reversible_heun_step
 from .base import GradientBackend, register_backend
 
 __all__ = [
@@ -128,7 +129,7 @@ def checkpoint_solve(spec, drift, diffusion, params, z0, bm, t0, t1,
         t = t0 + j * dt
         # drawn inside the checkpointed region: regenerated on remat, not
         # stored (counter-based threefry — cheap relative to a field eval)
-        dw = bm.increment(j, num_steps).astype(dtype)
+        dw = _tree_cast(bm.increment(j, num_steps), dtype)
         new = spec.stepper(carry, t, dt, dw, drift, diffusion, params_,
                            noise)
         return jax.tree.map(
@@ -162,6 +163,7 @@ def checkpoint_solve_adaptive(spec, drift, diffusion, params, z0, bm,
 
     dtype = z0.dtype
     has_value = hasattr(bm, "value")
+    levy = getattr(bm, "levy_area", None) == "space-time"
     dkw = {} if bridge_depth is None else {"depth": bridge_depth}
 
     def step(carry, params_, i):
@@ -169,10 +171,15 @@ def checkpoint_solve_adaptive(spec, drift, diffusion, params, z0, bm,
         t_left = ts[j]
         dt = dts[j]
         if has_value:
-            dw = (bm.value(t_left + dt, **dkw).astype(dtype)
-                  - bm.value(t_left, **dkw).astype(dtype))
+            val_l = _tree_cast(bm.value(t_left, **dkw), dtype)
+            val_r = _tree_cast(bm.value(t_left + dt, **dkw), dtype)
+            if levy:
+                dw = stlevy_difference(val_l, val_r, t_left, t_left + dt,
+                                       bm.t0)
+            else:
+                dw = val_r - val_l
         else:
-            dw = bm.evaluate(t_left, t_left + dt, **dkw).astype(dtype)
+            dw = _tree_cast(bm.evaluate(t_left, t_left + dt, **dkw), dtype)
         new = spec.stepper(carry, t_left, dt, dw, drift, diffusion,
                            params_, noise)
         # padding slots (dt = 0, dw = 0) still evaluate the fields — at

@@ -23,7 +23,7 @@ from .. import nn
 from ..nn.core import tcat as _tcat  # the shared time-augmentation convention
 from .brownian import BrownianPath
 from .paths import LinearPathControl
-from .solve import solve
+from .solve import get_solver, solve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +71,13 @@ def _cfg_solve(cfg, drift, diffusion, params, z0, bm, num_steps, noise,
     (matrix) noise falls back to the unfused path with a warning.
     """
     solver = cfg.solver if solver is None else solver
+    # (W, H)-consuming solvers (srk): rebuild the path in space-time mode so
+    # cfg.solver="srk" works on every diagonal-noise config path without each
+    # call site knowing about Lévy areas.  General-noise solves fall through
+    # to the registry's eager noise_types error.
+    if (get_solver(solver).needs_levy_area and isinstance(bm, BrownianPath)
+            and bm.levy_area is None):
+        bm = dataclasses.replace(bm, levy_area="space-time")
     if gradient_mode is None:
         gradient_mode = getattr(cfg, "gradient_mode", None)
     if gradient_mode is None:

@@ -65,7 +65,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .brownian import BrownianPath
+from .brownian import BrownianPath, stlevy_difference
 from .gradients import (
     GRADIENT_BACKENDS,
     PRECISION_POLICIES,
@@ -80,6 +80,9 @@ from .solvers import (
     _heun_step,
     _midpoint_embedded_step,
     _midpoint_step,
+    _srk_embedded_step,
+    _srk_step,
+    _tree_cast,
     reversible_heun_embedded_step,
     reversible_heun_reverse_step,
     reversible_heun_step,
@@ -126,6 +129,12 @@ class SolverSpec:
             noise) -> (carry_new, err)`` embedded-pair step for adaptive
             error control, or ``None`` for solvers with no free embedded
             estimate (``adaptive=True`` is rejected for those).
+        needs_levy_area: the stepper consumes ``(ΔW, ΔH)`` space–time
+            Lévy-area pairs instead of plain ``ΔW`` increments; the
+            Brownian path must be constructed with
+            ``levy_area="space-time"`` (checked eagerly both ways).
+        noise_types: noise layouts the stepper accepts; ``noise=`` values
+            outside this tuple are rejected eagerly.
     """
 
     name: str
@@ -138,6 +147,8 @@ class SolverSpec:
     sde_type: str = "stratonovich"
     notes: str = ""
     embedded_stepper: Optional[Callable] = None
+    needs_levy_area: bool = False
+    noise_types: Tuple[str, ...] = ("diagonal", "general")
 
     @property
     def reversible(self) -> bool:
@@ -205,6 +216,17 @@ register_solver(SolverSpec(
     notes="algebraically reversible; O(1)-memory exact adjoint (paper §3)",
     embedded_stepper=reversible_heun_embedded_step))
 
+register_solver(SolverSpec(
+    "srk", _srk_step, None,
+    nfe_per_step=5, strong_order=1.5,
+    gradient_modes=("discretise", "checkpoint"),
+    sde_type="ito",
+    notes="strong-order-1.5 SRK (Kloeden–Platen) on (W, H) space–time "
+          "Lévy-area pairs; diagonal noise",
+    embedded_stepper=_srk_embedded_step,
+    needs_levy_area=True,
+    noise_types=("diagonal",)))
+
 
 def gradient_capabilities() -> dict:
     """The capability table: ``gradient_mode -> tuple of solver names``.
@@ -232,6 +254,11 @@ def _validate(spec: SolverSpec, gradient_mode: str, noise: str,
             f"{gradient_capabilities()[gradient_mode]})")
     if noise not in ("diagonal", "general"):
         raise ValueError(f"unknown noise type {noise!r}")
+    if noise not in spec.noise_types:
+        raise ValueError(
+            f"solver {spec.name!r} supports noise={spec.noise_types}, got "
+            f"{noise!r} (the order-1.5 scheme needs full Lévy areas for "
+            f"general noise, which space-time H does not provide)")
     if use_pallas_kernels:
         if not spec.supports_pallas:
             raise ValueError(
@@ -348,8 +375,12 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
     # ``evaluate(s, t) == value(t) - value(s)`` bitwise, which keeps the
     # backward replay (via evaluate) bit-identical to the forward.
     has_value = hasattr(bm, "value")
+    # space-time mode: single-point queries return (W(t), H_{t0,t}) pairs;
+    # the interval pair is recovered through the SAME op graph evaluate()
+    # uses (stlevy_difference), so the backward replay stays bit-identical.
+    levy = getattr(bm, "levy_area", None) == "space-time"
     dkw = {} if bridge_depth is None else {"depth": bridge_depth}
-    w_left0 = (bm.value(t0, **dkw).astype(dtype) if has_value
+    w_left0 = (_tree_cast(bm.value(t0, **dkw), dtype) if has_value
                else jnp.zeros((), dtype))
     state0 = (carry0, jnp.asarray(t0, dtype), jnp.asarray(dt0, dtype),
               jnp.asarray(1.0, dtype), jnp.asarray(0, jnp.int32),
@@ -369,11 +400,14 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
         is_last = dt >= remaining
         dt_eff = jnp.minimum(dt, remaining)
         if has_value:
-            w_right = bm.value(t + dt_eff, **dkw).astype(dtype)
-            dw = w_right - w_left
+            w_right = _tree_cast(bm.value(t + dt_eff, **dkw), dtype)
+            if levy:
+                dw = stlevy_difference(w_left, w_right, t, t + dt_eff, bm.t0)
+            else:
+                dw = w_right - w_left
         else:
             w_right = w_left
-            dw = bm.evaluate(t, t + dt_eff, **dkw).astype(dtype)
+            dw = _tree_cast(bm.evaluate(t, t + dt_eff, **dkw), dtype)
         cand, err = step(carry, t, dt_eff, dw, drift, diffusion, params, noise)
         scale = atol + rtol * jnp.maximum(jnp.abs(get_z(carry)),
                                           jnp.abs(get_z(cand)))
@@ -405,6 +439,28 @@ def _adaptive_loop(spec, drift, diffusion, params, z0, bm, t0, t1,
     nfe = (n_acc + n_rej) * spec.nfe_per_step + (1 if rev else 0)
     stats = AdaptiveStats(n_acc, n_rej, nfe, t, done, dts, ts)
     return carry, stats
+
+
+def _check_levy_area(spec: SolverSpec, bm) -> None:
+    """(W, H)-pair solvers need a space-time path, and vice versa — eagerly.
+
+    A mismatch either way would fail deep inside a scan (tuple vs array
+    ``dw``) or, worse for the None-mode direction, silently feed a ``(W,
+    H)`` tuple into steppers written for bare ``ΔW``.
+    """
+    mode = getattr(bm, "levy_area", None)
+    if spec.needs_levy_area and mode != "space-time":
+        raise ValueError(
+            f"solver {spec.name!r} consumes (W, H) space-time Lévy-area "
+            f"pairs — construct the Brownian path with "
+            f"levy_area='space-time' (got levy_area={mode!r} on "
+            f"{type(bm).__name__})")
+    if not spec.needs_levy_area and mode == "space-time":
+        raise ValueError(
+            f"solver {spec.name!r} consumes plain ΔW increments but the "
+            f"Brownian path was built with levy_area='space-time' — drop "
+            f"the flag (solvers consuming (W, H) pairs: "
+            f"{[s.name for s in SOLVERS.values() if s.needs_levy_area]})")
 
 
 def _check_adaptive_bm(bm) -> None:
@@ -459,6 +515,7 @@ def solve_adaptive(
     """
     spec = get_solver(solver)
     _validate(spec, "discretise", noise, False, False, adaptive=True)
+    _check_levy_area(spec, bm)
     _check_adaptive_bm(bm)
     _check_bridge_depth(bm, bridge_depth)
     drift, diffusion = resolve_precision(precision).wrap_fields(
@@ -599,6 +656,7 @@ def solve(
     spec = get_solver(solver)
     _validate(spec, gradient_mode, noise, use_pallas_kernels, save_trajectory,
               adaptive)
+    _check_levy_area(spec, bm)
     if not adaptive and any(
             v is not None for v in (rtol, atol, max_steps, dt0,
                                     bridge_depth)):
@@ -695,7 +753,9 @@ def solve_batched(
         bm_shape = state_shape
 
     def single(z0_i, key_i):
-        bm = BrownianPath(key_i, t0, t1, bm_shape, z0.dtype)
+        bm = BrownianPath(key_i, t0, t1, bm_shape, z0.dtype,
+                          levy_area="space-time" if spec.needs_levy_area
+                          else None)
         return solve(drift, diffusion, params, z0_i, bm, t0, t1, num_steps,
                      **kwargs)
 

@@ -19,6 +19,9 @@ midpoint           Stratonovich  2 / step               paper's main baseline
 heun               Stratonovich  2 / step               trapezoidal
 reversible_heun    Stratonovich  **1 / step**           algebraically
                                                         reversible (paper §3)
+srk                Itô           5 / step               strong order **1.5**;
+                                                        consumes (ΔW, ΔH)
+                                                        space–time Lévy pairs
 =================  ============  =====================  ====================
 
 `reversible_heun` here is the *plain scan* version: differentiating through
@@ -55,7 +58,18 @@ NFE_PER_STEP = {
     "midpoint": 2,
     "heun": 2,
     "reversible_heun": 1,
+    "srk": 5,
 }
+
+
+def _tree_cast(x, dtype):
+    """``astype`` over a pytree — identical to ``x.astype`` for plain arrays.
+
+    The Brownian layer returns a bare ``ΔW`` array in ``levy_area=None`` mode
+    and a ``(ΔW, ΔH)`` pair in ``levy_area="space-time"`` mode; every dw
+    consumer casts through this so both shapes flow.
+    """
+    return jax.tree.map(lambda a: a.astype(dtype), x)
 
 
 def apply_diffusion(sigma: jax.Array, dw: jax.Array, noise: str) -> jax.Array:
@@ -226,6 +240,83 @@ def _midpoint_embedded_step(z, t, dt, dw, drift, diffusion, params, noise):
     return z1, z1 - (z + euler)
 
 
+def _srk_embedded_step(z, t, dt, dw, drift, diffusion, params, noise):
+    """Strong-order-1.5 explicit SRK step (Kloeden–Platen, Itô, diagonal noise).
+
+    ``dw`` must be the ``(ΔW, ΔH)`` pair from a ``levy_area="space-time"``
+    Brownian path: the I_{(1,0)} = ∫∫ dW ds iterated integral that separates
+    order 1.5 from order 1.0 is ``dt·(H + ΔW/2)`` and cannot be recovered
+    from ``ΔW`` alone.  The scheme is the explicit strong order-1.5 method of
+    Kloeden & Platen (1992, §11.2) specialised to diagonal noise, with every
+    supporting value evaluated at ``t+dt`` so non-autonomous fields pick up
+    the L⁰-operator time derivatives:
+
+        Υ± = z + a·dt ± b·√dt          Φ± = Υ₊ ± b(Υ₊)·√dt
+
+        z₁ = z + ¼(a(Υ₊) + 2a + a(Υ₋))dt + b·ΔW
+               + (b(Υ₊) − b(Υ₋))/(2√dt) · I₍₁,₁₎
+               + (a(Υ₊) − a(Υ₋))/(2√dt) · I₍₁,₀₎
+               + (b(Υ₊) − 2b + b(Υ₋))/(2dt) · I₍₀,₁₎
+               + (b(Φ₊) − b(Φ₋) − b(Υ₊) + b(Υ₋))/(2dt) · I₍₁,₁,₁₎
+
+    with I₍₁,₁₎ = (ΔW²−dt)/2, I₍₁,₀₎ = dt(H + ΔW/2), I₍₀,₁₎ = ΔW·dt −
+    I₍₁,₀₎, I₍₁,₁,₁₎ = (ΔW³ − 3dt·ΔW)/6.  Strong order 1.5 requires the
+    diffusion to be strictly diagonal (∂bᵢ/∂zⱼ = 0 for i≠j) — same
+    restriction as torchsde's ``srk``; for additive noise the scheme keeps
+    order 1.5 with the I₍₁,₀₎ drift-area term doing the work.
+
+    The embedded estimate is the Euler–Maruyama step from the stage-1
+    evaluations — zero extra NFE, the same pattern as heun/midpoint.
+
+    ``dt == 0`` (the adaptive checkpoint replay's padding slots) is guarded
+    with a ``where``-substituted divisor so no inf·0 NaN enters the forward
+    values or their VJP.
+    """
+    if not isinstance(dw, (tuple, list)):
+        raise TypeError(
+            "solver 'srk' needs (dW, dH) pairs — construct the Brownian path "
+            "with levy_area='space-time'")
+    if noise != "diagonal":
+        raise ValueError(
+            "solver 'srk' supports diagonal noise only (general noise needs "
+            "full Lévy areas, which space-time H does not provide)")
+    w, h = dw
+    dt_safe = jnp.where(dt == 0, jnp.ones_like(dt), dt)
+    sq = jnp.sqrt(dt_safe)
+
+    a0 = drift(params, t, z)
+    b0 = diffusion(params, t, z)
+    up = z + a0 * dt + b0 * sq
+    um = z + a0 * dt - b0 * sq
+    t1 = t + dt
+    ap = drift(params, t1, up)
+    am = drift(params, t1, um)
+    bp = diffusion(params, t1, up)
+    bm_ = diffusion(params, t1, um)
+    pp = up + bp * sq
+    pm = up - bp * sq
+    bpp = diffusion(params, t1, pp)
+    bpm = diffusion(params, t1, pm)
+
+    i10 = dt * (h + 0.5 * w)           # I_{(1,0)} = ∫ (W_s − W_t) ds
+    i01 = w * dt - i10                 # I_{(0,1)} = ∫ s dW
+    i11 = 0.5 * (w * w - dt)           # I_{(1,1)}
+    i111 = (w * w * w - 3.0 * dt * w) / 6.0
+
+    z1 = (z
+          + 0.25 * (ap + 2.0 * a0 + am) * dt
+          + b0 * w
+          + (bp - bm_) * (0.5 / sq) * i11
+          + (ap - am) * (0.5 / sq) * i10
+          + (bp - 2.0 * b0 + bm_) * (0.5 / dt_safe) * i01
+          + (bpp - bpm - bp + bm_) * (0.5 / dt_safe) * i111)
+    return z1, z1 - (z + a0 * dt + b0 * w)
+
+
+def _srk_step(z, t, dt, dw, drift, diffusion, params, noise):
+    return _srk_embedded_step(z, t, dt, dw, drift, diffusion, params, noise)[0]
+
+
 def _euler_maruyama_step(z, t, dt, dw, drift, diffusion, params, noise):
     return z + drift(params, t, z) * dt + apply_diffusion(diffusion(params, t, z), dw, noise)
 
@@ -275,7 +366,7 @@ def sde_solve(
 
         def body(state, n):
             t = t0 + n * dt
-            dw = bm.increment(n, num_steps).astype(dtype)
+            dw = _tree_cast(bm.increment(n, num_steps), dtype)
             new = reversible_heun_step(state, t, dt, dw, drift, diffusion, params, noise,
                                        use_pallas=use_pallas_kernels)
             return new, (new.z if save_trajectory else None)
@@ -300,7 +391,7 @@ def sde_solve(
 
     def body(z, n):
         t = t0 + n * dt
-        dw = bm.increment(n, num_steps).astype(dtype)
+        dw = _tree_cast(bm.increment(n, num_steps), dtype)
         z1 = step(z, t, dt, dw, drift, diffusion, params, noise)
         return z1, (z1 if save_trajectory else None)
 

@@ -52,7 +52,7 @@ def _x64_scope():
 
 
 def _problem(key, batch=4, x_dim=4, w_dim=3, noise="general",
-             dtype=jnp.float64):
+             dtype=jnp.float64, levy_area=None):
     from repro import nn
 
     k1, k2, kz, kw = jax.random.split(key, 4)
@@ -72,7 +72,7 @@ def _problem(key, batch=4, x_dim=4, w_dim=3, noise="general",
         w_shape = (batch, x_dim)
 
     z0 = jax.random.normal(kz, (batch, x_dim), dtype)
-    bm = BrownianPath(kw, 0.0, 1.0, w_shape, dtype)
+    bm = BrownianPath(kw, 0.0, 1.0, w_shape, dtype, levy_area=levy_area)
     return params, drift, diffusion, z0, bm
 
 
@@ -218,10 +218,13 @@ def test_continuous_adjoint_dispatch_bitwise(key):
 # =============================================================================
 
 
-@pytest.mark.parametrize("noise", ["diagonal", "general"])
-@pytest.mark.parametrize("solver", sorted(SOLVERS))
+@pytest.mark.parametrize("solver,noise", [
+    (s, n) for s in sorted(SOLVERS) for n in ("diagonal", "general")
+    if n in SOLVERS[s].noise_types])  # capability-aware: srk is diagonal-only
 def test_checkpoint_matches_discretise(key, solver, noise):
-    params, drift, diffusion, z0, bm = _problem(key, noise=noise)
+    params, drift, diffusion, z0, bm = _problem(
+        key, noise=noise,
+        levy_area="space-time" if SOLVERS[solver].needs_levy_area else None)
 
     def loss(mode, save_traj):
         def f(p):

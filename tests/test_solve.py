@@ -47,9 +47,9 @@ def _neural(key, x_dim=6, dtype=jnp.float32):
 # -----------------------------------------------------------------------------
 
 
-def test_registry_contains_all_four_solvers():
+def test_registry_contains_all_solvers():
     assert repro.available_solvers() == (
-        "euler_maruyama", "heun", "midpoint", "reversible_heun")
+        "euler_maruyama", "heun", "midpoint", "reversible_heun", "srk")
     for spec in SOLVERS.values():
         assert spec.nfe_per_step == NFE_PER_STEP[spec.name]
         assert spec.gradient_modes  # never empty
@@ -62,7 +62,9 @@ def test_every_solver_mode_combination_dispatches_or_rejects(key, solver, mode):
     raise ValueError naming the solver — never silently fall back."""
     params, drift, diffusion = _ou()
     z0 = jnp.ones((4, 3))
-    bm = BrownianPath(key, 0.0, 1.0, (4, 3))
+    spec = get_solver(solver)
+    bm = BrownianPath(key, 0.0, 1.0, (4, 3),
+                      levy_area="space-time" if spec.needs_levy_area else None)
     save_traj = mode not in ("continuous_adjoint", "checkpoint")
     run = lambda: solve(drift, diffusion, params, z0, bm, 0.0, 1.0, 8,
                         solver=solver, gradient_mode=mode,

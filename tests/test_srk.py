@@ -1,0 +1,244 @@
+"""Strong-order-1.5 SRK solver tests (DESIGN.md §13).
+
+The scheme is the Kloeden–Platen explicit order-1.5 method for Itô
+diagonal noise, consuming (ΔW, ΔH) pairs from a ``levy_area="space-time"``
+Brownian path.  Tested here: registry capabilities and eager rejections,
+gradient-backend agreement (checkpoint == discretise to roundoff),
+adaptive composition, exactness properties the tableau implies, and the
+dt=0 padding-slot NaN guard the checkpoint replay relies on.  The
+empirical order-1.5 slope is gated in benchmarks/convergence.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.brownian import BrownianPath, DenseBrownianPath
+from repro.core.solve import get_solver, solve, solve_adaptive, solve_batched
+from repro.core.solvers import NFE_PER_STEP, _srk_embedded_step
+
+
+def _gbm():
+    drift = lambda p, t, z: p * z
+    diffusion = lambda p, t, z: 0.4 * z
+    return drift, diffusion
+
+
+def _levy_bm(seed=5, shape=(), dtype=jnp.float32):
+    return BrownianPath(jax.random.PRNGKey(seed), 0.0, 1.0, shape, dtype,
+                        levy_area="space-time")
+
+
+# -----------------------------------------------------------------------------
+# registry + eager validation
+# -----------------------------------------------------------------------------
+
+
+def test_srk_spec_registered():
+    spec = get_solver("srk")
+    assert spec.strong_order == 1.5
+    assert spec.needs_levy_area
+    assert spec.noise_types == ("diagonal",)
+    assert spec.sde_type == "ito"
+    assert spec.embedded_stepper is not None
+    assert not spec.reversible
+    assert NFE_PER_STEP["srk"] == spec.nfe_per_step == 5
+
+
+def test_srk_eager_rejections():
+    drift, diffusion = _gbm()
+    bm = _levy_bm()
+    z0 = jnp.asarray(1.0)
+    with pytest.raises(ValueError, match="reversible_adjoint"):
+        solve(drift, diffusion, 0.7, z0, bm, 0.0, 1.0, 8, solver="srk",
+              gradient_mode="reversible_adjoint", save_trajectory=False)
+    with pytest.raises(ValueError, match="Pallas"):
+        solve(drift, diffusion, 0.7, z0, bm, 0.0, 1.0, 8, solver="srk",
+              use_pallas_kernels=True, save_trajectory=False)
+    with pytest.raises(ValueError, match="noise"):
+        solve(drift, diffusion, 0.7, z0, bm, 0.0, 1.0, 8, solver="srk",
+              noise="general", save_trajectory=False)
+    # path-mode mismatches, both directions
+    plain = BrownianPath(jax.random.PRNGKey(5), 0.0, 1.0, ())
+    with pytest.raises(ValueError, match="space-time"):
+        solve(drift, diffusion, 0.7, z0, plain, 0.0, 1.0, 8, solver="srk",
+              save_trajectory=False)
+    with pytest.raises(ValueError, match="space-time"):
+        solve(drift, diffusion, 0.7, z0, bm, 0.0, 1.0, 8, solver="heun",
+              save_trajectory=False)
+
+
+def test_srk_stepper_rejects_bare_dw():
+    drift, diffusion = _gbm()
+    with pytest.raises(TypeError, match="space-time"):
+        _srk_embedded_step(jnp.asarray(1.0), 0.0, 0.125, jnp.asarray(0.1),
+                           drift, diffusion, 0.7, "diagonal")
+
+
+# -----------------------------------------------------------------------------
+# solve paths
+# -----------------------------------------------------------------------------
+
+
+def test_srk_fixed_grid_runs_and_saves_trajectory():
+    drift, diffusion = _gbm()
+    traj = solve(drift, diffusion, 0.7, jnp.asarray(1.0), _levy_bm(),
+                 0.0, 1.0, 16, solver="srk")
+    assert traj.shape == (17,)
+    assert bool(jnp.all(jnp.isfinite(traj)))
+    assert float(traj[0]) == 1.0
+
+
+def test_srk_checkpoint_matches_discretise_gradients():
+    """Checkpointing is a rematerialisation of the same discrete scheme —
+    gradients agree to f64 roundoff."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        drift, diffusion = _gbm()
+        bm = _levy_bm(dtype=jnp.float64)
+
+        def loss(p, mode):
+            return solve(drift, diffusion, p, jnp.asarray(1.0, jnp.float64),
+                         bm, 0.0, 1.0, 16, solver="srk", gradient_mode=mode,
+                         save_trajectory=False)
+
+        g_disc = jax.grad(loss)(jnp.asarray(0.7, jnp.float64), "discretise")
+        g_ckpt = jax.grad(loss)(jnp.asarray(0.7, jnp.float64), "checkpoint")
+        np.testing.assert_allclose(np.asarray(g_disc), np.asarray(g_ckpt),
+                                   rtol=1e-12, atol=1e-14)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_srk_additive_noise_interpolates_exactly_in_w():
+    """Additive noise, zero drift: the scheme reduces to z + σΔW exactly
+    (every supporting-stage difference vanishes except the b₀ΔW term)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        drift = lambda p, t, z: jnp.zeros_like(z)
+        diffusion = lambda p, t, z: jnp.full_like(z, 0.3)
+        # Dense path: grid increments telescope to value(t1) pathwise
+        # (BrownianPath.increment is iid-per-grid by design)
+        bm = DenseBrownianPath.sample(jax.random.PRNGKey(9), 0.0, 1.0, 64,
+                                      (4,), jnp.float64,
+                                      levy_area="space-time")
+        z = solve(drift, diffusion, None, jnp.zeros(4, jnp.float64), bm,
+                  0.0, 1.0, 8, solver="srk", save_trajectory=False)
+        w1, _ = bm.value(1.0)
+        np.testing.assert_allclose(np.asarray(z), 0.3 * np.asarray(w1),
+                                   rtol=1e-12, atol=1e-14)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_srk_adaptive_composes_and_checkpoint_grad_finite():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        drift, diffusion = _gbm()
+        bm = _levy_bm(dtype=jnp.float64)
+        z, stats = solve_adaptive(drift, diffusion, jnp.asarray(0.7),
+                                  jnp.asarray(1.0, jnp.float64), bm,
+                                  0.0, 1.0, solver="srk", rtol=2e-3,
+                                  atol=1e-6)
+        assert bool(stats.converged)
+        assert int(stats.num_accepted) > 0
+        assert int(stats.nfe) == 5 * (int(stats.num_accepted)
+                                      + int(stats.num_rejected))
+
+        def loss(p):
+            return solve(drift, diffusion, p,
+                         jnp.asarray(1.0, jnp.float64), bm, 0.0, 1.0, 16,
+                         solver="srk", gradient_mode="checkpoint",
+                         save_trajectory=False, adaptive=True, rtol=2e-3,
+                         atol=1e-6)
+
+        # freeze-and-replay: the replayed primal agrees with the
+        # controller's to roundoff (the richer SRK expression graph may
+        # fuse differently between the while-loop and nested-scan
+        # programs, so this is allclose-tight, not bitwise like the
+        # simpler steppers)
+        np.testing.assert_allclose(float(loss(jnp.asarray(0.7))), float(z),
+                                   rtol=1e-13)
+        g = jax.grad(loss)(jnp.asarray(0.7))
+        assert bool(jnp.isfinite(g)) and float(g) != 0.0
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_srk_dt_zero_padding_step_is_identity_with_clean_gradient():
+    """The checkpoint replay's padding slots run the stepper at dt=0 with
+    (ΔW, ΔH) = (0, 0); the dt_safe guard must make that an exact identity
+    AND keep NaN out of the backward (inf·0 in a mul VJP poisons the
+    cotangent even when masked downstream)."""
+    drift, diffusion = _gbm()
+
+    z0 = jnp.asarray(1.3)
+
+    def step_terminal(p):
+        pair = (jnp.zeros(()), jnp.zeros(()))
+        out, err = _srk_embedded_step(z0, 0.0, jnp.asarray(0.0), pair,
+                                      drift, diffusion, p, "diagonal")
+        return out, err
+
+    out, err = step_terminal(jnp.asarray(0.7))
+    assert float(out) == float(z0) and float(err) == 0.0
+    g = jax.grad(lambda p: step_terminal(p)[0])(jnp.asarray(0.7))
+    assert bool(jnp.isfinite(g))
+
+
+def test_srk_batched_constructs_levy_paths():
+    drift, diffusion = _gbm()
+    z = solve_batched(drift, diffusion, 0.7, jnp.ones((4,)),
+                      jax.random.split(jax.random.PRNGKey(0), 4),
+                      0.0, 1.0, 8, solver="srk", save_trajectory=False)
+    assert z.shape == (4,)
+    assert bool(jnp.all(jnp.isfinite(z)))
+
+
+def test_srk_via_config_path():
+    """cfg.solver='srk' flows through the sde-module front-end: the
+    diagonal-noise Brownian path is rebuilt in space-time mode
+    transparently (the serving/train eager-validation path)."""
+    from repro.core.sde import NeuralSDEConfig, _cfg_solve
+
+    cfg = NeuralSDEConfig(solver="srk", exact_adjoint=False, num_steps=8)
+    drift, diffusion = _gbm()
+    bm = BrownianPath(jax.random.PRNGKey(2), 0.0, cfg.t1, (3,), cfg.dtype)
+    traj = _cfg_solve(cfg, drift, diffusion, 0.7,
+                      jnp.ones(3, cfg.dtype), bm, cfg.num_steps, "diagonal")
+    assert traj.shape == (9, 3)
+    assert bool(jnp.all(jnp.isfinite(traj)))
+
+
+def test_srk_strong_error_beats_heun_on_shared_path():
+    """On one shared Brownian path, SRK at n=32 beats reversible-Heun-family
+    baselines at the same n on GBM terminal error (the order-1.5 claim in
+    miniature; the full slope fit is gated in benchmarks/convergence.py)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        mu, sig = 0.7, 0.5
+        drift = lambda p, t, z: mu * z
+        diffusion = lambda p, t, z: sig * z
+        paths = 256
+
+        def err_one(solver, levy):
+            def one(k):
+                dp = DenseBrownianPath.sample(
+                    k, 0.0, 1.0, 256, (), jnp.float64,
+                    levy_area="space-time" if levy else None)
+                z = solve(drift, diffusion, None, jnp.asarray(1.0), dp,
+                          0.0, 1.0, 32, solver=solver,
+                          save_trajectory=False)
+                wT = dp.value(1.0)[0] if levy else dp.value(1.0)
+                # Itô GBM pathwise-exact terminal value
+                exact = jnp.exp((mu - 0.5 * sig ** 2) + sig * wT)
+                return (z - exact) ** 2
+            ks = jax.random.split(jax.random.PRNGKey(0), paths)
+            return float(jnp.sqrt(jnp.mean(jax.vmap(one)(ks))))
+
+        e_srk = err_one("srk", True)
+        e_em = err_one("euler_maruyama", False)
+        assert e_srk < 0.2 * e_em, (e_srk, e_em)
+    finally:
+        jax.config.update("jax_enable_x64", False)
