@@ -28,6 +28,7 @@ SUITES = {
     "latent_sde": latent_sde.main,           # paper Fig. 2 / App. B on the ELBO
     "serving": serving.main,                 # trajectory-sampling throughput
     "serving_load": serving.main_load,       # open-loop continuous-batching gate
+    "serving_async": serving.main_async,     # async front + preemption + pools
 }
 
 

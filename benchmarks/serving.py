@@ -39,6 +39,19 @@ at chunk boundaries must beat waiting for the batch to drain on the
 tail — is deterministic per machine calibration, while the millisecond
 scale still tracks real hardware for the CI regression trajectory.
 
+The **serving_async** suite (``main_async``; BENCH_serving_async.json)
+gates the PR 10 surfaces (DESIGN.md §14): open-loop Poisson arrivals over
+the asyncio ingestion frontend with per-deadline-class p50/p99 and a
+bitwise frontend-vs-solo oracle; the cross-lane preemption gate — one
+seeded trace of relaxed bulk rollouts + realtime terminal requests
+replayed with ``preempt`` off/on on a virtual clock charged per
+*executed batch* at fixed synthetic costs (machine-independent:
+realtime misses with preemption must be <= without, and the no-preempt
+run must actually miss at utilisation rho >= 0.3); and the elastic-pool
+gate — LRU eviction under a byte budget must engage and the
+evicted-then-recompiled rollout must be bitwise the unbounded
+registry's.
+
 Run:  PYTHONPATH=src python benchmarks/serving.py --preset tiny
 Emits BENCH_serving.json (schema in benchmarks/report.py).
 """
@@ -303,6 +316,311 @@ def bench_open_loop(num_steps, max_batch, chunks, n_requests, request_max,
 
 def main_load(preset: str = "full"):
     return bench_open_loop(**LOAD_SHAPES[preset])
+
+
+# -----------------------------------------------------------------------------
+# serving_async: asyncio ingestion + preemption + elastic pools (DESIGN.md §14)
+# -----------------------------------------------------------------------------
+
+#: Fixed synthetic batch costs for the preemption gate's virtual clock.
+#: Charged per *executed batch* (scheduler counter deltas), not per
+#: iteration — preemption's whole effect is running FEWER/cheaper batches
+#: while realtime work is outstanding, which a flat per-iteration charge
+#: would erase.  Fixed costs (not measured) make the gate bit-identical
+#: across machines: a bulk chunk batch is a long device dispatch, a
+#: terminal batch a short one, and the 50ms realtime deadline sits between
+#: one terminal batch and one chunk batch.
+T_CHUNK_S = 0.060
+T_TERM_S = 0.010
+
+ASYNC_SHAPES = {
+    "tiny":  dict(num_steps=16, max_batch=8, chunks=8, hidden=8, width=16,
+                  n_front=24, n_bulk=12, n_rt=80,
+                  bulk_interarrival_s=0.12, rt_interarrival_s=0.025),
+    "quick": dict(num_steps=16, max_batch=16, chunks=8, hidden=16, width=32,
+                  n_front=48, n_bulk=20, n_rt=140,
+                  bulk_interarrival_s=0.10, rt_interarrival_s=0.020),
+    "full":  dict(num_steps=32, max_batch=32, chunks=8, hidden=16, width=32,
+                  n_front=96, n_bulk=32, n_rt=240,
+                  bulk_interarrival_s=0.08, rt_interarrival_s=0.015),
+}
+
+
+def _make_registry(num_steps, hidden, width, model_ids=("default",),
+                   pool_budget_bytes=None, seed=0):
+    from repro.core.sde import NeuralSDEConfig
+    from repro.serving import LoadedModel, ModelRegistry
+    from repro.serving.registry import _init_params
+
+    cfg = NeuralSDEConfig(data_dim=1, hidden_dim=hidden, noise_dim=4,
+                          width=width, num_steps=num_steps)
+    registry = ModelRegistry(pool_budget_bytes=pool_budget_bytes)
+    for i, mid in enumerate(model_ids):
+        registry.register(LoadedModel(
+            mid, "sde-gan", cfg, _init_params("sde-gan", cfg, seed + i)))
+    return registry, cfg
+
+
+def bench_async_ingestion(num_steps, max_batch, chunks, hidden, width,
+                          n_front, seed=0, **_):
+    """Open-loop Poisson arrivals over the asyncio frontend (real time,
+    mixed deadline classes), per-class p50/p99 — plus the bitwise oracle:
+    a request served through the frontend equals its solo direct-step
+    trajectories exactly."""
+    import asyncio
+
+    import numpy as np
+
+    from repro.serving import (AsyncFrontend, Request, Scheduler,
+                               class_latency_summary)
+
+    registry, cfg = _make_registry(num_steps, hidden, width, seed=seed)
+    sched = Scheduler(registry, max_batch=max_batch, chunks=chunks)
+    sched.warm("default", kinds=("init", "chunk", "terminal"))
+
+    rng = np.random.RandomState(seed)
+    requests, kinds = [], ("rollout", "terminal")
+    from repro.serving import DEADLINE_CLASSES
+    for i in range(n_front):
+        cls = DEADLINE_CLASSES[i % len(DEADLINE_CLASSES)]
+        kind = kinds[i % 2]
+        requests.append(Request(
+            rid=i, size=1 + i % 2, seed=seed * 7919 + i, kind=kind,
+            deadline_ms=cls.max_deadline_ms if kind == "terminal"
+            else float("inf")))
+    # modest offered rate: the suite measures the ingestion path's
+    # latency accounting, not saturation (bench_preemption owns that)
+    arrivals = np.cumsum(rng.exponential(0.005, n_front))
+
+    async def drive():
+        front = AsyncFrontend(sched)
+        await front.start()
+
+        async def client(req, at):
+            await asyncio.sleep(float(at))
+            return await front.submit(req)
+
+        try:
+            return await asyncio.gather(
+                *(client(r, a) for r, a in zip(requests, arrivals)))
+        finally:
+            await front.close()
+
+    results = asyncio.run(drive())
+    assert len(results) == n_front
+    summary = class_latency_summary(results)
+    rows = []
+    for cls_name, s in sorted(summary.items()):
+        rows += [("serving_async", f"front_{cls_name}_p50_ms",
+                  s["p50_s"] * 1e3),
+                 ("serving_async", f"front_{cls_name}_p99_ms",
+                  s["p99_s"] * 1e3)]
+        print(f"serving_async,front,{cls_name},p50={s['p50_s']*1e3:.1f}ms,"
+              f"p99={s['p99_s']*1e3:.1f}ms,n={s['requests']}", flush=True)
+
+    # bitwise oracle: frontend-served == solo direct-step, exactly
+    probe = Request(rid=0, size=2, seed=seed + 12345)
+
+    def solo():
+        s = Scheduler(registry, max_batch=max_batch, chunks=chunks,
+                      collect=True)
+        s.submit(Request(rid=1, size=2, seed=seed + 12345))
+        (res,) = s.run()
+        return res.samples
+
+    async def through_front():
+        s = Scheduler(registry, max_batch=max_batch, chunks=chunks,
+                      collect=True)
+        front = AsyncFrontend(s)
+        await front.start()
+        try:
+            # a second in-flight request makes the oracle non-trivial:
+            # the probe shares its batches
+            other = asyncio.ensure_future(front.submit(
+                Request(rid=9, size=1, seed=seed + 999)))
+            res = await front.submit(probe)
+            await other
+            return res.samples
+        finally:
+            await front.close()
+
+    np.testing.assert_array_equal(asyncio.run(through_front()), solo())
+    rows.append(("serving_async", "front_bitwise_vs_solo_ok", 1.0))
+    print("serving_async,front_bitwise_vs_solo_ok", flush=True)
+    return rows
+
+
+def _virtual_batch_loop(sched, requests, arrivals, vt):
+    """Open-loop driver charging virtual time per *executed batch*
+    (counter deltas x the fixed T_CHUNK_S/T_TERM_S costs).  Unlike
+    serving_load's flat per-iteration charge, this makes preemption
+    visible to the clock: a preempting iteration skips the bulk chunk
+    batch and costs only the terminal batch it actually ran."""
+    feed = sorted(zip(arrivals, range(len(requests))))
+    results, i = [], 0
+    while i < len(feed) or sched.busy:
+        while i < len(feed) and feed[i][0] <= vt[0]:
+            arrival, idx = feed[i]
+            sched.submit(requests[idx], arrival_s=arrival)
+            i += 1
+        if sched.busy:
+            c0 = sched.counters["chunk_batches"]
+            t0 = sched.counters["terminal_batches"]
+            results += sched.step()
+            dt = ((sched.counters["chunk_batches"] - c0) * T_CHUNK_S
+                  + (sched.counters["terminal_batches"] - t0) * T_TERM_S)
+            # an iteration that executed nothing (everything paused or
+            # deferred) still ticks, else the loop would freeze the clock
+            vt[0] += dt if dt > 0 else T_TERM_S
+        else:
+            vt[0] = feed[i][0]
+    return results
+
+
+def bench_preemption(num_steps, max_batch, chunks, hidden, width, n_bulk,
+                     n_rt, bulk_interarrival_s, rt_interarrival_s, seed=0,
+                     **_):
+    """The preemption gate: one seeded trace — relaxed-class bulk rollouts
+    on lane "bulk", realtime-class terminal requests on lane "rt" —
+    replayed with preempt off and on.  Virtual time per executed batch
+    (see :data:`T_CHUNK_S`), so the comparison is machine-independent.
+    Gates: realtime misses with preemption <= without (and the scenario is
+    non-vacuous: misses occur without preemption, rows really paused)."""
+    import numpy as np
+
+    from repro.serving import Request, Scheduler, class_latency_summary
+
+    rng = np.random.RandomState(seed)
+    bulk = [Request(rid=i, size=1 + i % 2, seed=seed + i, model_id="bulk")
+            for i in range(n_bulk)]
+    rt = [Request(rid=1000 + i, size=1, seed=seed + 5000 + i, model_id="rt",
+                  kind="terminal", deadline_ms=40.0) for i in range(n_rt)]
+    arrivals = (np.cumsum(rng.exponential(bulk_interarrival_s,
+                                          n_bulk)).tolist()
+                + np.cumsum(rng.exponential(rt_interarrival_s, n_rt)).tolist())
+    requests = bulk + rt
+
+    registry, _ = _make_registry(num_steps, hidden, width, ("bulk", "rt"),
+                                 seed=seed)
+    # compile both lanes' pools once (registry-cached across both runs)
+    warm = Scheduler(registry, max_batch=max_batch, chunks=chunks)
+    warm.warm("bulk", kinds=("init", "chunk"))
+    warm.warm("rt", kinds=("terminal",))
+
+    rows, misses, rho = [], {}, {}
+    for preempt in (False, True):
+        vt = [0.0]
+        sched = Scheduler(registry, max_batch=max_batch, chunks=chunks,
+                          clock=lambda: vt[0], preempt=preempt)
+        results = _virtual_batch_loop(sched, requests, arrivals, vt)
+        assert len(results) == len(requests)
+        busy_s = (sched.counters["chunk_batches"] * T_CHUNK_S
+                  + sched.counters["terminal_batches"] * T_TERM_S)
+        rho[preempt] = busy_s / max(vt[0], 1e-9)
+        mode = "preempt" if preempt else "nopreempt"
+        summary = class_latency_summary(results)
+        rt_s = summary["realtime"]
+        misses[preempt] = rt_s["deadline_misses"]
+        rows += [
+            ("serving_async", f"{mode}_rt_p50_ms", rt_s["p50_s"] * 1e3),
+            ("serving_async", f"{mode}_rt_p99_ms", rt_s["p99_s"] * 1e3),
+            ("serving_async", f"{mode}_rt_misses", float(misses[preempt])),
+            ("serving_async", f"{mode}_relaxed_p99_ms",
+             summary["relaxed"]["p99_s"] * 1e3),
+            ("serving_async", f"{mode}_rho", rho[preempt]),
+        ]
+        if preempt:
+            rows.append(("serving_async", "preempted_rows",
+                         float(sched.counters["preempted_rows"])))
+            assert sched.counters["preempted_rows"] > 0, (
+                "preemption never engaged — the gate would be vacuous")
+            assert (sched.counters["resumed_rows"]
+                    == sched.counters["preempted_rows"]), (
+                "paused rows leaked: "
+                f"{sched.counters['preempted_rows']} paused vs "
+                f"{sched.counters['resumed_rows']} resumed")
+        print(f"serving_async,{mode},rt_p99={rt_s['p99_s']*1e3:.1f}ms,"
+              f"rt_misses={misses[preempt]}/{n_rt},rho={rho[preempt]:.2f}",
+              flush=True)
+
+    assert rho[False] >= 0.3, (
+        f"offered load rho={rho[False]:.2f} < 0.3 — the no-preempt run is "
+        f"not in the contended regime the gate is about")
+    assert misses[False] > 0, (
+        "no realtime misses even WITHOUT preemption — the trace is too "
+        "easy for the gate to mean anything")
+    # THE gate: preemption may never cost realtime misses, and on this
+    # trace it must cut them (deterministic: virtual clock, seeded trace)
+    assert misses[True] <= misses[False], (
+        f"preemption INCREASED realtime misses: {misses[True]} vs "
+        f"{misses[False]}")
+    return rows
+
+
+def bench_eviction(num_steps, max_batch, chunks, hidden, width, seed=0,
+                   **_):
+    """Elastic-pool gate: under a budget sized below the working set the
+    registry must evict (LRU) and transparently recompile — and the
+    recompiled rollout must be bitwise the unbounded registry's."""
+    import numpy as np
+
+    from repro.serving import ModelRegistry, Request, Scheduler
+
+    def run(registry, rid):
+        sched = Scheduler(registry, max_batch=max_batch, chunks=chunks,
+                          collect=True)
+        sched.submit(Request(rid=rid, size=1, seed=seed + 424242))
+        (res,) = sched.run()
+        return res.samples
+
+    free, cfg = _make_registry(num_steps, hidden, width, seed=seed)
+    expect = run(free, 0)
+    unbounded_bytes = free.pool_bytes()
+    rows = [("serving_async", "pool_unbounded_bytes",
+             float(unbounded_bytes))]
+    if unbounded_bytes == 0:
+        # documented fail-open: no memory_analysis on this backend
+        rows.append(("serving_async", "pool_evictions", 0.0))
+        print("serving_async,eviction,SKIP (no memory_analysis sizes)",
+              flush=True)
+        return rows
+
+    budget = max(1, int(unbounded_bytes * 0.75))
+    reg = ModelRegistry(pool_budget_bytes=budget)
+    from repro.serving import LoadedModel
+    reg.register(LoadedModel("default", "sde-gan", cfg,
+                             free.get("default").params))
+    got = run(reg, 1)
+    compiles_first = reg.compiles
+    np.testing.assert_array_equal(got, expect)
+    assert reg.evictions >= 1, (
+        f"budget {budget} B under a {unbounded_bytes} B working set "
+        f"never evicted")
+    # the evicted program recompiles transparently — and stays bitwise
+    got2 = run(reg, 2)
+    np.testing.assert_array_equal(got2, expect)
+    assert reg.compiles > compiles_first, (
+        "second pass recompiled nothing — eviction did not actually drop "
+        "a program the workload needs")
+    rows += [
+        ("serving_async", "pool_budget_bytes", float(budget)),
+        ("serving_async", "pool_evictions", float(reg.evictions)),
+        ("serving_async", "pool_recompiles",
+         float(reg.compiles - compiles_first)),
+        ("serving_async", "eviction_bitwise_ok", 1.0),
+    ]
+    print(f"serving_async,eviction,budget={budget}B,"
+          f"evictions={reg.evictions},recompiles="
+          f"{reg.compiles - compiles_first},bitwise_ok", flush=True)
+    return rows
+
+
+def main_async(preset: str = "full"):
+    shape = ASYNC_SHAPES[preset]
+    rows = bench_async_ingestion(**shape)
+    rows += bench_preemption(**shape)
+    rows += bench_eviction(**shape)
+    return rows
 
 
 if __name__ == "__main__":

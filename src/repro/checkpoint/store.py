@@ -164,18 +164,33 @@ def save_serving_bundle(ckpt_dir, step: int, params, workload: str,
                                  {model_id: (params, workload, cfg)})
 
 
-def save_serving_registry(ckpt_dir, step: int, models: dict) -> Path:
+def save_serving_registry(ckpt_dir, step: int, models: dict,
+                          serving_hints: Optional[dict] = None) -> Path:
     """Persist N named models as ONE v2 serving bundle.
 
     ``models``: ``{model_id: (params, workload, cfg)}``.  The params trees
     are stored under their model id (leaf paths are prefixed), and the
     manifest's ``models`` list carries one entry per id — the registry
-    handshake ``repro.serving.ModelRegistry.load`` restores from."""
+    handshake ``repro.serving.ModelRegistry.load`` restores from.
+
+    ``serving_hints``: optional ``{model_id: dict}`` of JSON-safe serving
+    hints written as each entry's ``"serving"`` key (e.g.
+    ``{"quota": 4}``) — the loader surfaces them as
+    ``LoadedModel.hints`` and the scheduler reads ``quota`` as a
+    per-model admission default.  Hints are advisory: readers ignore keys
+    they don't know, and bundles without the key load exactly as before
+    (the v2 schema is unchanged — the key is additive)."""
     if not models:
         raise ValueError("a serving bundle needs at least one model entry")
+    hints = serving_hints or {}
+    unknown = sorted(set(hints) - set(models))
+    if unknown:
+        raise ValueError(f"serving_hints name model ids {unknown} that are "
+                         f"not in the bundle ({sorted(models)})")
     meta = {"schema": SERVING_SCHEMA,
             "models": [{"model_id": mid, "workload": workload,
-                        "config": config_to_meta(cfg)}
+                        "config": config_to_meta(cfg),
+                        **({"serving": hints[mid]} if mid in hints else {})}
                        for mid, (_, workload, cfg) in models.items()]}
     tree = {mid: params for mid, (params, _, _) in models.items()}
     return save_checkpoint(Path(ckpt_dir) / _SERVING_SUBDIR, step, tree,

@@ -112,8 +112,31 @@ def serve_lm(arch: str, batch: int, prompt_len: int, gen: int,
 # -----------------------------------------------------------------------------
 
 
+_EPILOG = """\
+tolerance routing (DESIGN.md §11):
+  Adaptive terminal batches are coalesced per deadline class and run at
+  the LOOSEST rtol the batch's tightest deadline allows (route_rtol).
+  This replaced the PR 5 tightest-ask rule — one accuracy-hungry request
+  no longer slows every deadline-bound request sharing its batch.
+  Explicit per-request rtol asks survive as accuracy floors only.
+  SLO ladder: realtime <=50ms -> 1e-2, interactive <=250ms -> 3e-3,
+  standard <=1000ms -> 1e-3, relaxed (no SLO) -> 3e-4.
+
+scheduler extras (DESIGN.md §14, all require --scheduler):
+  --preempt          cross-lane preemption: under realtime-class pressure
+                     on any lane, other lanes' relaxed rollouts yield at
+                     chunk boundaries (bitwise-invisible to them).
+  --pool-budget-mb   LRU cap on the AOT compile pools: cold
+                     (model, kind, bucket) programs are evicted and
+                     transparently recompiled on next use.
+  --async-front      drive the drain through the asyncio ingestion
+                     front-end (repro.serving.AsyncFrontend).
+"""
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--workload", choices=SERVE_WORKLOADS + ("lm",),
                     default="sde-gan")
     ap.add_argument("--ckpt-dir", default=None,
@@ -154,6 +177,17 @@ def main(argv=None):
                          "(repro.serving.Scheduler) — 'fifo' runs the same "
                          "chunked programs under the PR 4 drain-then-"
                          "coalesce baseline for comparison")
+    ap.add_argument("--preempt", action="store_true",
+                    help="scheduler: yield relaxed-class rollouts at chunk "
+                         "boundaries while any lane has realtime-class work "
+                         "(see epilog; bitwise-invisible)")
+    ap.add_argument("--pool-budget-mb", type=float, default=None,
+                    help="scheduler: LRU-evict cold compiled programs once "
+                         "the pools exceed this many MB (XLA "
+                         "memory_analysis accounting; recompile on reuse)")
+    ap.add_argument("--async-front", action="store_true",
+                    help="scheduler: drive the drain through the asyncio "
+                         "ingestion front-end instead of a direct step loop")
     ap.add_argument("--solver", default="reversible_heun",
                     help="fresh-init (--smoke) solver; restored bundles "
                          "carry their own")
@@ -183,7 +217,10 @@ def main(argv=None):
                      latent_mode=args.latent_mode, obs_len=args.obs_len,
                      stream_chunks=args.stream_chunks,
                      adaptive=args.adaptive, atol=args.atol,
-                     seed=args.seed, scheduler=args.scheduler, args=args)
+                     seed=args.seed, scheduler=args.scheduler,
+                     preempt=args.preempt,
+                     pool_budget_mb=args.pool_budget_mb,
+                     async_front=args.async_front, args=args)
 
 
 if __name__ == "__main__":

@@ -373,8 +373,10 @@ def make_adaptive_terminal_step(cfg, atol: float = 1e-6,
     *traced* scalar, so launch/serve.py AOT-compiles ONE program per bucket
     and every tolerance a client asks for runs through it — the adaptive
     ``lax.while_loop`` simply takes more (or fewer) steps.  A coalesced
-    batch serves the tightest tolerance among its requests, which
-    over-delivers for the rest (never under-delivers).  Rows whose
+    batch runs at the tolerance :func:`repro.serving.route_rtol` picks —
+    the loosest rtol the batch's tightest deadline allows, with explicit
+    per-request asks as accuracy floors (the PR 7 SLO rule; the PR 5
+    tightest-ask minimum is gone).  Rows whose
     controller exhausted its step budget come back ``converged=False`` —
     the serving loop reports them instead of passing them off as ``Y_T``.
     ``max_steps`` defaults to a production-sized 4096 (forward-only — no

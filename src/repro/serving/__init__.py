@@ -17,6 +17,14 @@ wrapper over:
   (per-row traced ``t_start``), new requests join in-flight batches at
   chunk boundaries (arrival order), and adaptive terminal
   batches run at the deadline-routed tolerance (:func:`route_rtol`).
+  PR 10 adds per-model admission quotas and cross-lane preemption
+  (``preempt=True`` — relaxed rows yield at chunk boundaries under
+  realtime pressure, bitwise-invisibly; DESIGN.md §14).
+- :class:`AsyncFrontend` — asyncio ingestion in front of one scheduler:
+  ``await submit(request)`` queues, the engine drains between scheduler
+  iterations (= chunk boundaries), ``serve_tcp`` adds a JSON-lines TCP
+  loopback; the compiled hot loop runs on a single executor thread so
+  the event loop never blocks on device work.
 - :func:`serve_sde` — the batteries-included service driver (restore,
   mesh, buckets, drain loops) behind the CLI.
 
@@ -36,6 +44,11 @@ The private helpers PR 4/5 grew inside launch/serve.py — ``_coalesce``,
 package now with stable names (imported below).
 """
 
+from .frontend import (  # noqa: F401
+    AsyncFrontend,
+    request_from_wire,
+    result_summary,
+)
 from .registry import (  # noqa: F401
     LoadedModel,
     ModelRegistry,
@@ -44,6 +57,7 @@ from .registry import (  # noqa: F401
 )
 from .scheduler import (  # noqa: F401
     Scheduler,
+    class_latency_summary,
     latency_summary,
     run_open_loop,
     serve_buckets,
@@ -70,6 +84,7 @@ from .types import (  # noqa: F401
 )
 
 __all__ = [
+    "AsyncFrontend",
     "DEADLINE_CLASSES",
     "DeadlineClass",
     "LoadedModel",
@@ -77,11 +92,14 @@ __all__ = [
     "Request",
     "Scheduler",
     "ServeResult",
+    "class_latency_summary",
     "deadline_class_for",
     "latency_summary",
     "load_model",
     "percentile",
+    "request_from_wire",
     "restore_for_serving",
+    "result_summary",
     "route_rtol",
     "run_open_loop",
     "serve_buckets",

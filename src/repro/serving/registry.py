@@ -1,4 +1,5 @@
-"""Hot-loadable multi-model registry (DESIGN.md §11).
+"""Hot-loadable multi-model registry with elastic AOT pools
+(DESIGN.md §11/§14).
 
 N named checkpoints live in ONE serving process: each
 :class:`LoadedModel` is a params-only restore of one ``repro-serving/v2``
@@ -8,10 +9,21 @@ AOT-compiled program the schedulers build is cached here keyed by
 ``(model_id, kind, bucket)`` — unloading a model drops its params AND its
 compile pool, loading a new checkpoint under a fresh id never touches the
 programs already serving traffic.
+
+The pools are **elastic** (PR 10): each cached program's footprint is
+read from XLA's ``memory_analysis()`` at compile time, and under a
+``pool_budget_bytes`` cap (CLI ``--pool-budget-mb``) the registry evicts
+cold ``(model_id, kind, bucket)`` entries least-recently-used until the
+pool fits.  Eviction is transparent: the next request for an evicted
+program re-compiles it through the same memoised :meth:`compiled` path,
+and because compilation is deterministic for a fixed (program, shapes),
+an evicted-then-recompiled rollout is bitwise the uncached one
+(tests/test_serving_async.py pins this).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable, Optional
@@ -20,6 +32,25 @@ import jax
 import jax.numpy as jnp
 
 from .. import checkpoint as ckpt
+
+
+def _program_bytes(compiled) -> int:
+    """A compiled program's resident footprint: generated code + argument
+    + output + temp bytes from XLA's ``memory_analysis()``.  Returns 0
+    when the backend cannot report (then the budget can never trip —
+    eviction fails open rather than guessing)."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:  # noqa: BLE001 — backend-dependent, absence is fine
+        return 0
+    total = 0
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes"):
+        try:
+            total += int(getattr(mem, field, 0) or 0)
+        except TypeError:
+            pass
+    return total
 
 
 def _build_cfg(workload: str, config: dict):
@@ -49,13 +80,20 @@ def _init_params(workload: str, cfg, seed: int):
 
 @dataclasses.dataclass
 class LoadedModel:
-    """One registry entry: a named, servable checkpoint."""
+    """One registry entry: a named, servable checkpoint.
+
+    ``hints`` carries the bundle's optional per-model ``"serving"`` dict
+    (e.g. ``{"quota": 4}`` — see ``save_serving_registry``); schedulers
+    read it as a default for per-model admission quotas, and an explicit
+    ``Scheduler(quota=...)`` always wins over it.
+    """
 
     model_id: str
     workload: str
     cfg: object
     params: object
     step: int = 0
+    hints: dict = dataclasses.field(default_factory=dict)
 
 
 def load_model(ckpt_dir, model_id: Optional[str] = None,
@@ -84,7 +122,8 @@ def load_model(ckpt_dir, model_id: Optional[str] = None,
     params, got = ckpt.restore_serving_model(
         ckpt_dir, _init_params(entry["workload"], cfg, 0), model_id,
         step=step)
-    return LoadedModel(model_id, entry["workload"], cfg, params, got)
+    return LoadedModel(model_id, entry["workload"], cfg, params, got,
+                       hints=dict(entry.get("serving") or {}))
 
 
 def restore_for_serving(workload: str, ckpt_dir: str):
@@ -110,11 +149,29 @@ class ModelRegistry:
     per ``(model_id, kind, bucket)``, so a new model's first batch pays
     its compiles and nobody else's cache is invalidated.  :meth:`unload`
     drops a model's params and every pool entry keyed to it.
+
+    Elastic-pool contract: with ``pool_budget_bytes`` set, the pool is an
+    LRU — every :meth:`compiled` hit refreshes its entry, and inserting a
+    program that pushes :meth:`pool_bytes` past the budget evicts the
+    coldest entries first (the entry just inserted is never evicted, so a
+    program too big for the budget still serves).  Eviction never changes
+    results: the recompiled program is bitwise the evicted one.
+    ``evictions`` / ``compiles`` counters are public for tests and
+    benchmarks to assert the cache actually cycled.
     """
 
-    def __init__(self):
+    def __init__(self, pool_budget_bytes: Optional[int] = None):
+        if pool_budget_bytes is not None and pool_budget_bytes <= 0:
+            raise ValueError(
+                f"pool_budget_bytes must be positive (got "
+                f"{pool_budget_bytes}); pass None for an unbounded pool")
         self._models: dict = {}
-        self._pools: dict = {}  # (model_id, kind, bucket) -> compiled
+        # (model_id, kind, bucket) -> (compiled, nbytes); ordered cold->hot.
+        self._pools: "collections.OrderedDict" = collections.OrderedDict()
+        self.pool_budget_bytes = pool_budget_bytes
+        #: Programs dropped under the budget / total builder() calls.
+        self.evictions = 0
+        self.compiles = 0
 
     # -- the model table ----------------------------------------------------
 
@@ -146,6 +203,8 @@ class ModelRegistry:
         return tuple(ids)
 
     def unload(self, model_id: str) -> None:
+        """Drop a model's params AND every compile-pool entry keyed to it
+        (errors by name on unknown ids)."""
         if model_id not in self._models:
             raise ValueError(f"model {model_id!r} is not registered "
                              f"(ids: {sorted(self._models)})")
@@ -154,6 +213,8 @@ class ModelRegistry:
             del self._pools[key]
 
     def get(self, model_id: str) -> LoadedModel:
+        """Look up a registered model by id, erroring by name (listing the
+        registered ids) rather than raising a bare ``KeyError``."""
         try:
             return self._models[model_id]
         except KeyError:
@@ -163,6 +224,7 @@ class ModelRegistry:
                 f"model first") from None
 
     def ids(self) -> tuple:
+        """The registered model ids, sorted (stable across runs)."""
         return tuple(sorted(self._models))
 
     def __contains__(self, model_id: str) -> bool:
@@ -178,19 +240,55 @@ class ModelRegistry:
         ``jit(...).lower(...).compile()`` — the registry only owns the
         cache and its keying).  ``kind`` names the program family
         (``"sample"``, ``"init"``, ``"chunk"``, ``"terminal"``) so one
-        model's families never collide on a bucket size."""
+        model's families never collide on a bucket size.
+
+        Under a pool budget this is also the LRU touch point: a hit
+        refreshes the entry, a miss compiles, records the program's
+        ``memory_analysis()`` bytes, and evicts cold entries until the
+        pool fits (see the class docstring; an evicted key just lands
+        back here as a miss)."""
         self.get(model_id)  # unknown ids fail by name, not a silent pool
         key = (model_id, kind, bucket)
         if key not in self._pools:
             t0 = time.perf_counter()
-            self._pools[key] = builder()
+            compiled = builder()
+            self.compiles += 1
+            self._pools[key] = (compiled, _program_bytes(compiled))
             if verbose:
                 print(f"[serve] compiled {model_id}/{kind} bucket {bucket} "
                       f"in {time.perf_counter() - t0:.2f}s", flush=True)
-        return self._pools[key]
+            self._evict(protect=key, verbose=verbose)
+        self._pools.move_to_end(key)  # LRU touch: hottest at the end
+        return self._pools[key][0]
+
+    def _evict(self, protect, verbose: bool = True) -> None:
+        """Drop coldest pool entries until the pool fits the budget.
+
+        ``protect`` (the key just inserted) is never evicted — a single
+        program larger than the whole budget must still serve."""
+        if self.pool_budget_bytes is None:
+            return
+        while (self.pool_bytes() > self.pool_budget_bytes
+               and len(self._pools) > 1):
+            cold = next(iter(self._pools))
+            if cold == protect:
+                break
+            _, nbytes = self._pools.pop(cold)
+            self.evictions += 1
+            if verbose:
+                print(f"[serve] evicted {cold[0]}/{cold[1]} bucket "
+                      f"{cold[2]} ({nbytes} B) under pool budget "
+                      f"{self.pool_budget_bytes} B", flush=True)
 
     def pool_keys(self, model_id: Optional[str] = None) -> tuple:
         """The compile-pool keys currently cached (a model's on request)."""
         keys = self._pools if model_id is None else [
             k for k in self._pools if k[0] == model_id]
         return tuple(sorted(keys))
+
+    def pool_bytes(self, model_id: Optional[str] = None) -> int:
+        """Total ``memory_analysis()`` bytes resident in the compile pool
+        (one model's share on request).  0 on backends that cannot report
+        program footprints — then no budget can ever trip."""
+        return sum(nbytes for k, (_, nbytes) in self._pools.items()
+                   if model_id is None or k[0] == model_id)

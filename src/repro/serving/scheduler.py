@@ -26,6 +26,20 @@ per deadline class and each batch runs at the tolerance
 :func:`repro.serving.route_rtol` picks — the loosest rtol the batch's
 tightest deadline allows — through one traced-rtol compiled program per
 ``(model_id, bucket)``.
+
+PR 10 adds **per-model admission quotas** and **cross-lane preemption**
+(DESIGN.md §14).  A quota caps how many rows one model may hold in
+flight, so a burst on one lane cannot monopolise the iteration.  With
+``preempt=True``, whenever any lane has realtime-class work pending or in
+flight, every *other* lane's relaxed-class rollout rows yield at their
+next chunk boundary: they move from ``active`` to ``paused`` (their
+carried state and chunk index travel with them) and the lane's
+loosest-class terminal batches are deferred, so the iteration's device
+time goes to the deadline-bound work.  Because every chunk is a pure
+function of ``(params, seed, row, chunk index)`` and a paused row resumes
+at exactly the chunk it yielded before, preemption — like mid-flight
+admission — is bitwise-invisible to the preempted trajectory
+(tests/test_serving_async.py pins this against the solo scheduler).
 """
 
 from __future__ import annotations
@@ -104,24 +118,31 @@ class _Row:
 class _Lane:
     """Per-model scheduling state (models never share a compiled batch)."""
 
-    def __init__(self, model, chunks: int):
+    def __init__(self, model, chunks: int, quota: Optional[int] = None):
         cfg = model.cfg
         if cfg.num_steps % chunks != 0:
             raise ValueError(
                 f"model {model.model_id!r}: chunks ({chunks}) must divide "
                 f"the solver horizon num_steps ({cfg.num_steps}) so chunks "
                 f"share a grid")
+        if quota is not None and quota < 1:
+            raise ValueError(
+                f"model {model.model_id!r}: admission quota must be >= 1 "
+                f"(got {quota}) — a zero quota can never serve")
         self.model = model
         self.chunks = chunks
+        self.quota = quota
         self.span = cfg.t1 / chunks
         self.steps_per = cfg.num_steps // chunks
         self.pending_roll: list = []   # (sort_key, seq, _InFlight)
         self.pending_term: list = []   # (seq, Request, arrival_s)
         self.active: list = []         # [_Row]
+        self.paused: list = []         # [_Row] preempted at a chunk boundary
 
     @property
     def busy(self) -> bool:
-        return bool(self.pending_roll or self.pending_term or self.active)
+        return bool(self.pending_roll or self.pending_term or self.active
+                    or self.paused)
 
 
 class Scheduler:
@@ -144,18 +165,33 @@ class Scheduler:
             don't want the host round-trip).
         shard_base: bucket granularity (device count under a mesh).
         clock: injectable time source (seconds) for deterministic tests.
+        preempt: enable cross-lane preemption (DESIGN.md §14) — while any
+            lane has realtime-class work pending or in flight, other
+            lanes' relaxed-class rollout rows pause at their next chunk
+            boundary and their relaxed terminal batches defer.  Bitwise-
+            invisible to the preempted trajectories.
+        quota: per-model admission cap on in-flight rows — an int applies
+            to every lane, a ``{model_id: int}`` dict per lane (models
+            absent from the dict fall back to the bundle's ``serving``
+            hint, then to unlimited).  Pending requests over quota wait
+            in arrival order; they are never dropped.
     """
 
     def __init__(self, registry: ModelRegistry, *, max_batch: int = 16,
                  chunks: int = 4, mode: str = "continuous",
                  classes=DEADLINE_CLASSES, atol: float = 1e-6,
                  max_steps: int = 4096, collect: bool = False,
-                 shard_base: int = 1, clock=time.perf_counter):
+                 shard_base: int = 1, clock=time.perf_counter,
+                 preempt: bool = False, quota=None):
         if mode not in ("continuous", "fifo"):
             raise ValueError(
                 f"mode must be 'continuous' or 'fifo', got {mode!r}")
         if chunks < 1:
             raise ValueError(f"chunks must be >= 1, got {chunks}")
+        if quota is not None and not isinstance(quota, (int, dict)):
+            raise TypeError(
+                f"quota must be an int (every model), a dict "
+                f"{{model_id: int}}, or None, got {type(quota).__name__}")
         self.registry = registry
         self.buckets = serve_buckets(max_batch, shard_base)
         self.chunks = chunks
@@ -164,6 +200,12 @@ class Scheduler:
         self.atol = atol
         self.max_steps = max_steps
         self.collect = collect
+        self.preempt = preempt
+        self.quota = quota
+        #: Observable scheduling counters (benchmarks charge virtual time
+        #: per executed batch; tests assert preemption really engaged).
+        self.counters = {"chunk_batches": 0, "terminal_batches": 0,
+                         "preempted_rows": 0, "resumed_rows": 0}
         self._clock = clock
         self._t0 = clock()
         self._seq = itertools.count()
@@ -189,7 +231,20 @@ class Scheduler:
     # -- submission ---------------------------------------------------------
 
     def now(self) -> float:
+        """Seconds since scheduler construction on the injectable clock
+        (virtual under the benchmark drivers, wall time by default)."""
         return self._clock() - self._t0
+
+    def _quota_for(self, model) -> Optional[int]:
+        """Resolve one model's admission quota: the scheduler's explicit
+        ``quota`` argument wins, then the bundle's ``serving: {quota: N}``
+        hint (:attr:`LoadedModel.hints`), then unlimited."""
+        if isinstance(self.quota, int):
+            return self.quota
+        if isinstance(self.quota, dict) and model.model_id in self.quota:
+            return self.quota[model.model_id]
+        hint = getattr(model, "hints", None) or {}
+        return hint.get("quota")
 
     def _lane(self, model_id: str) -> _Lane:
         if model_id not in self._lanes:
@@ -201,7 +256,8 @@ class Scheduler:
                     f"generator (chunked rollouts / adaptive terminal "
                     f"samples) — serve latent-sde decodes through "
                     f"repro.serving.serve_sde's coalescing loop")
-            self._lanes[model_id] = _Lane(model, self.chunks)
+            self._lanes[model_id] = _Lane(model, self.chunks,
+                                          quota=self._quota_for(model))
         return self._lanes[model_id]
 
     def submit(self, request: Request,
@@ -231,6 +287,7 @@ class Scheduler:
 
     @property
     def busy(self) -> bool:
+        """True while any lane holds pending, in-flight, or paused work."""
         return any(lane.busy for lane in self._lanes.values())
 
     # -- compiled programs (registry-cached) --------------------------------
@@ -297,14 +354,71 @@ class Scheduler:
     def step(self) -> List[ServeResult]:
         """One scheduler iteration: per lane, serve at most one terminal
         batch, admit pending rollouts into free slots, and advance every
-        in-flight row one chunk.  Returns the requests completed by this
-        iteration."""
+        in-flight row one chunk.  With ``preempt=True``, lanes without
+        realtime-class work first yield their relaxed-class rows (pause /
+        defer) whenever any other lane has realtime work outstanding, and
+        paused rows resume once the pressure clears.  Returns the requests
+        completed by this iteration."""
         results: List[ServeResult] = []
-        for lane in self._lanes.values():
-            results += self._step_terminal(lane)
+        urgent = self._urgent_lanes() if self.preempt else frozenset()
+        for model_id, lane in self._lanes.items():
+            yield_now = bool(urgent) and model_id not in urgent
+            if self.preempt:
+                if yield_now:
+                    self._pause_relaxed(lane)
+                else:
+                    self._resume(lane)
+            results += self._step_terminal(lane, defer_relaxed=yield_now)
             self._admit(lane)
             results += self._advance(lane)
         return results
+
+    # -- preemption (DESIGN.md §14) -----------------------------------------
+
+    def _is_realtime(self, request: Request) -> bool:
+        return (deadline_class_for(request.deadline_ms, self.classes)
+                is self.classes[0])
+
+    def _is_relaxed(self, request: Request) -> bool:
+        return (deadline_class_for(request.deadline_ms, self.classes)
+                is self.classes[-1])
+
+    def _urgent_lanes(self) -> frozenset:
+        """Model ids with realtime-class work pending or in flight.  A
+        pending realtime deadline (≤ the tightest class bound) is always
+        treated as at-risk: one full drain of another lane's chunk batch
+        already costs a realtime-scale budget, so the policy does not try
+        to predict the miss — it yields whenever realtime work exists."""
+        urgent = set()
+        for model_id, lane in self._lanes.items():
+            if (any(self._is_realtime(f.request)
+                    for _, _, f in lane.pending_roll)
+                    or any(self._is_realtime(req)
+                           for _, req, _ in lane.pending_term)
+                    or any(self._is_realtime(r.flight.request)
+                           for r in lane.active)):
+                urgent.add(model_id)
+        return frozenset(urgent)
+
+    def _pause_relaxed(self, lane: _Lane) -> None:
+        """Move the lane's relaxed-class rollout rows from ``active`` to
+        ``paused`` — the chunk-boundary yield.  Rows carry their hidden
+        state and chunk index, so resuming is bitwise-invisible."""
+        still, paused = [], []
+        for row in lane.active:
+            (paused if self._is_relaxed(row.flight.request)
+             else still).append(row)
+        if paused:
+            lane.active = still
+            lane.paused += paused
+            self.counters["preempted_rows"] += len(paused)
+
+    def _resume(self, lane: _Lane) -> None:
+        """Re-activate paused rows (pause order — they were admitted
+        before anything still pending) while bucket capacity allows."""
+        while lane.paused and len(lane.active) < self.buckets[-1]:
+            lane.active.append(lane.paused.pop(0))
+            self.counters["resumed_rows"] += 1
 
     def run(self) -> List[ServeResult]:
         """Drain every queue; returns all results (completion order)."""
@@ -314,9 +428,14 @@ class Scheduler:
         return results
 
     def _admit(self, lane: _Lane) -> None:
-        if self.mode == "fifo" and lane.active:
+        if self.mode == "fifo" and (lane.active or lane.paused):
             return  # baseline: the in-flight batch drains before coalescing
-        capacity = self.buckets[-1] - len(lane.active)
+        in_flight = len(lane.active) + len(lane.paused)
+        capacity = self.buckets[-1] - in_flight
+        if lane.quota is not None:
+            # the per-model admission quota: paused rows still hold their
+            # admission (they yielded compute, not their slot)
+            capacity = min(capacity, lane.quota - in_flight)
         admitted: list = []
         while (lane.pending_roll
                and lane.pending_roll[0][2].request.size <= capacity):
@@ -357,6 +476,7 @@ class Scheduler:
         ys, x_next = self._chunk_pool(lane, bucket)(
             lane.model.params, keys, x, t_starts)
         jax.block_until_ready(x_next)
+        self.counters["chunk_batches"] += 1
 
         results: List[ServeResult] = []
         still_active: list = []
@@ -396,7 +516,8 @@ class Scheduler:
 
     # -- adaptive terminal batches (SLO-routed) -----------------------------
 
-    def _step_terminal(self, lane: _Lane) -> List[ServeResult]:
+    def _step_terminal(self, lane: _Lane,
+                       defer_relaxed: bool = False) -> List[ServeResult]:
         if not lane.pending_term:
             return []
         # coalesce within ONE deadline class per iteration, tightest class
@@ -411,6 +532,11 @@ class Scheduler:
             if cls.name in by_class:
                 entries = by_class[cls.name]
                 break
+        if defer_relaxed and cls is self.classes[-1]:
+            # preemption pressure: the lane's best pending terminal work is
+            # relaxed-class — defer it so the urgent lane gets this
+            # iteration's device time (deadline-bound classes still serve)
+            return []
         batch, rows = [], 0
         while entries and rows + entries[0][1].size <= self.buckets[-1]:
             batch.append(entries.pop(0))
@@ -429,6 +555,7 @@ class Scheduler:
         samples, conv = self._terminal_pool(lane, bucket)(
             lane.model.params, keys, jnp.asarray(rtol, cfg.dtype))
         jax.block_until_ready(conv)
+        self.counters["terminal_batches"] += 1
         conv = np.asarray(conv)
         samples = np.asarray(samples) if self.collect else None
 
@@ -479,3 +606,15 @@ def latency_summary(results, q=(0.5, 0.99)) -> dict:
         1 for r in results if not r.deadline_met
         and math.isfinite(r.deadline_ms))
     return out
+
+
+def class_latency_summary(results, classes=DEADLINE_CLASSES) -> dict:
+    """Per-deadline-class :func:`latency_summary`: ``{class name: summary}``
+    over the classes that actually appear in ``results``.  The per-class
+    tails are what the preemption gate reads — an aggregate p99 hides a
+    realtime-class miss behind the relaxed-class bulk."""
+    by_cls: dict = {}
+    for r in results:
+        by_cls.setdefault(deadline_class_for(r.deadline_ms, classes).name,
+                          []).append(r)
+    return {name: latency_summary(rs) for name, rs in by_cls.items()}

@@ -123,14 +123,20 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
               latent_mode: str = "prior", obs_len: int = 9,
               stream_chunks: int = 0, adaptive: bool = False,
               atol: float = 1e-6, seed: int = 0,
-              scheduler: Optional[str] = None, args=None) -> dict:
+              scheduler: Optional[str] = None, preempt: bool = False,
+              pool_budget_mb: Optional[float] = None,
+              async_front: bool = False, args=None) -> dict:
     """Run the trajectory-sampling service; returns the stats dict it prints.
 
     With ``--smoke`` and no ``--ckpt-dir``, a fresh-initialised model is
     saved to (and restored from) a throwaway serving bundle — the same
     restore path a trained checkpoint takes, exercised end to end.
     ``scheduler`` selects the continuous-batching path (``"continuous"``
-    or its ``"fifo"`` baseline) instead of the drain loops.
+    or its ``"fifo"`` baseline) instead of the drain loops; ``preempt``
+    (cross-lane preemption), ``pool_budget_mb`` (LRU compile-pool cap)
+    and ``async_front`` (drive the drain through
+    :class:`~repro.serving.AsyncFrontend` instead of a direct step loop)
+    ride on it and require it.
     """
     from ..launch.steps import SERVE_WORKLOADS
 
@@ -151,6 +157,18 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
             "--scheduler drives the continuous-batching chunked rollout, "
             "which is the SDE-GAN generator's carry machinery; latent-sde "
             "serves through the coalescing loop")
+    if scheduler is None and (preempt or pool_budget_mb is not None
+                              or async_front):
+        opts = [n for n, on in (("--preempt", preempt),
+                                ("--pool-budget-mb", pool_budget_mb
+                                 is not None),
+                                ("--async-front", async_front)) if on]
+        raise ValueError(
+            f"{', '.join(opts)} require the continuous-batching path — "
+            f"pass --scheduler continuous (or fifo)")
+    if pool_budget_mb is not None and pool_budget_mb <= 0:
+        raise ValueError(f"--pool-budget-mb must be positive, got "
+                         f"{pool_budget_mb}")
     if requests < 1 or request_max < 1:
         raise ValueError(
             f"--requests ({requests}) and --request-max ({request_max}) "
@@ -189,7 +207,9 @@ def serve_sde(workload: str, ckpt_dir: Optional[str], smoke: bool,
         if scheduler is not None:
             _scheduler_loop(cfg, params, buckets, requests, request_max,
                             scheduler, seed, stats,
-                            shard_base=n_dev if mesh is not None else 1)
+                            shard_base=n_dev if mesh is not None else 1,
+                            preempt=preempt, pool_budget_mb=pool_budget_mb,
+                            async_front=async_front)
         elif adaptive:
             _adaptive_terminal_loop(cfg, params, buckets, requests,
                                     request_max, atol, seed, stats)
@@ -380,30 +400,70 @@ def _stream_loop(workload, cfg, params, buckets, requests, request_max,
 
 
 def _scheduler_loop(cfg, params, buckets, requests, request_max, mode, seed,
-                    stats, shard_base: int = 1):
+                    stats, shard_base: int = 1, preempt: bool = False,
+                    pool_budget_mb: Optional[float] = None,
+                    async_front: bool = False):
     """Drive the continuous-batching :class:`Scheduler` over the synthetic
     stream (closed-loop: everything arrives at t0; the open-loop Poisson
-    driver lives in benchmarks/serving.py)."""
-    registry = ModelRegistry()
+    driver lives in benchmarks/serving.py).  With ``async_front`` the same
+    stream is pushed through :class:`~repro.serving.AsyncFrontend` — N
+    concurrent ``submit`` coroutines over the asyncio ingestion path —
+    instead of calling ``step`` directly."""
+    budget = (None if pool_budget_mb is None
+              else int(pool_budget_mb * 2 ** 20))
+    registry = ModelRegistry(pool_budget_bytes=budget)
     registry.register(LoadedModel("default", "sde-gan", cfg, params))
     chunks = 4 if cfg.num_steps % 4 == 0 else 1
     sched = Scheduler(registry, max_batch=buckets[-1], chunks=chunks,
-                      mode=mode, shard_base=shard_base)
+                      mode=mode, shard_base=shard_base, preempt=preempt)
     sched.warm("default")
     pending = synthetic_requests(requests, request_max, seed)
     t_start = time.perf_counter()
-    for r in pending:
-        sched.submit(r, arrival_s=0.0)
-    results, n_iter = [], 0
-    while sched.busy:
-        results += sched.step()
-        n_iter += 1
+    if async_front:
+        results, n_iter = _drain_async(sched, pending)
+    else:
+        for r in pending:
+            sched.submit(r, arrival_s=0.0)
+        results, n_iter = [], 0
+        while sched.busy:
+            results += sched.step()
+            n_iter += 1
     wall = time.perf_counter() - t_start
     _report(f"sde-gan/scheduler-{mode}×{chunks}chunks", stats,
             sum(r.size for r in results), n_iter,
             [r.latency_s for r in results], wall)
     stats.update(latency_summary(results), scheduler=mode, chunks=chunks)
+    stats.update(preempt=preempt, frontend="asyncio" if async_front
+                 else "direct")
+    if budget is not None:
+        stats.update(pool_budget_bytes=budget,
+                     pool_bytes=registry.pool_bytes(),
+                     pool_evictions=registry.evictions)
+        print(f"[serve] pool budget {pool_budget_mb:g} MB: "
+              f"{registry.pool_bytes()} B resident, "
+              f"{registry.evictions} evictions", flush=True)
     print(f"[serve] scheduler: mode={mode}, {len(results)} requests, "
           f"pools={len(registry.pool_keys('default'))} compiled programs "
           f"(chunk t_start per-row traced — admission at chunk boundaries)",
           flush=True)
+
+
+def _drain_async(sched, pending):
+    """Closed-loop drain over the asyncio frontend: one ``submit``
+    coroutine per request (all arrivals stamped t=0), gathered to
+    completion.  Returns ``(results, engine iterations)``."""
+    import asyncio
+
+    from .frontend import AsyncFrontend
+
+    async def drive():
+        front = AsyncFrontend(sched)
+        await front.start()
+        try:
+            results = await asyncio.gather(
+                *(front.submit(r, arrival_s=0.0) for r in pending))
+        finally:
+            await front.close()
+        return list(results), front.steps
+
+    return asyncio.run(drive())

@@ -25,10 +25,13 @@ class Request:
     """One client ask: ``size`` trajectories (or terminal samples) keyed
     off ``seed``.
 
-    ``deadline_ms``: the latency SLO — drives both admission priority
-    (earliest deadline first) and, for adaptive terminal sampling, the
-    served tolerance via :func:`route_rtol`.  ``math.inf`` means "no SLO"
-    (batch class).
+    ``deadline_ms``: the latency SLO — it picks the request's deadline
+    class, which drives the served tolerance for adaptive terminal
+    sampling (:func:`route_rtol`) and, under ``Scheduler(preempt=True)``,
+    whether the request counts as realtime pressure (tightest class) or
+    yields under it (loosest class).  Admission itself stays arrival-
+    order — deliberately not earliest-deadline-first, which starves the
+    relaxed class.  ``math.inf`` means "no SLO" (batch class).
 
     ``model_id``: which registry entry serves this request (multi-model
     serving; ``"default"`` matches a single-entry bundle and every
@@ -95,10 +98,15 @@ class ServeResult:
 
     @property
     def deadline_met(self) -> bool:
+        """True when the observed latency landed inside the request's
+        ``deadline_ms`` SLO (always True for the no-SLO batch class)."""
         return self.latency_s * 1e3 <= self.deadline_ms
 
     @property
     def num_converged(self) -> int:
+        """How many of the result's rows converged (== ``size`` for
+        fixed-grid rollouts; adaptive terminal rows may fall short when
+        the controller exhausts its step budget)."""
         import numpy as np
 
         return int(np.sum(np.asarray(self.converged)))

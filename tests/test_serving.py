@@ -231,6 +231,25 @@ def test_serve_cli_scheduler_two_simulated_devices():
     assert "traj/s" in r.stdout
 
 
+def test_serve_cli_async_preempt_pool_budget():
+    """The PR 10 scheduler extras through the CLI: --async-front drives
+    the asyncio ingestion path, --preempt and --pool-budget-mb thread to
+    the scheduler/registry (a generous budget evicts nothing but prints
+    its accounting), and all three are rejected by name without
+    --scheduler."""
+    r = _run_serve_cli(["--workload", "sde-gan", "--scheduler", "continuous",
+                        "--async-front", "--preempt",
+                        "--pool-budget-mb", "4096"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "scheduler-continuous" in r.stdout
+    assert "pool budget 4096 MB" in r.stdout
+    assert "0 evictions" in r.stdout
+    assert "latency p50" in r.stdout
+    r = _run_serve_cli(["--workload", "sde-gan", "--async-front"])
+    assert r.returncode != 0
+    assert "--scheduler" in r.stderr
+
+
 def test_serve_cli_adaptive_per_request_tolerance():
     """--adaptive terminal sampling: several distinct request tolerances
     must be served by exactly one compiled program per bucket (rtol is

@@ -1,0 +1,373 @@
+"""Async ingestion, preemption, quota, and elastic-pool tests
+(DESIGN.md §14).
+
+The PR 10 contracts: requests submitted over the asyncio frontend (queue
+or TCP loopback) produce bitwise the trajectories a solo direct-step
+scheduler produces; cross-lane preemption pauses relaxed-class rows at
+chunk boundaries and resumes them bitwise-invisibly; per-model admission
+quotas bound in-flight rows without ever dropping a request; LRU pool
+eviction under a byte budget recompiles transparently and bitwise; and
+bundle ``serving`` hints thread through ``LoadedModel.hints`` into the
+scheduler's quota default.
+"""
+
+import asyncio
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.sde import NeuralSDEConfig, generator_init
+from repro.serving import (AsyncFrontend, LoadedModel, ModelRegistry,
+                           Request, Scheduler, class_latency_summary,
+                           load_model, request_from_wire)
+
+GAN_CFG = dict(data_dim=1, hidden_dim=8, noise_dim=4, width=16, num_steps=8)
+
+
+def _registry(key, model_ids=("default",), **reg_kw):
+    reg = ModelRegistry(**reg_kw)
+    cfg = NeuralSDEConfig(**GAN_CFG)
+    for i, mid in enumerate(model_ids):
+        params = generator_init(jax.random.fold_in(key, i), cfg)
+        reg.register(LoadedModel(mid, "sde-gan", cfg, params))
+    return reg
+
+
+def _solo_samples(reg, req, **sched_kw):
+    """Oracle: the request's trajectories from a fresh direct-step
+    scheduler serving nothing else."""
+    sched = Scheduler(reg, max_batch=8, chunks=4, collect=True, **sched_kw)
+    sched.submit(req)
+    (res,) = sched.run()
+    return res.samples
+
+
+# -----------------------------------------------------------------------------
+# asyncio frontend: queue ingestion, bitwise oracle, TCP loopback
+# -----------------------------------------------------------------------------
+
+
+def test_async_frontend_bitwise_equals_solo(key):
+    """Concurrent submissions over the asyncio queue complete with bitwise
+    the trajectories each request gets from a solo scheduler — the engine
+    drains the queue only between steps, so async arrival IS chunk-
+    boundary admission."""
+    reg = _registry(key)
+    reqs = [Request(rid=i, size=1 + i % 3, seed=100 + i) for i in range(5)]
+
+    async def drive():
+        front = AsyncFrontend(
+            Scheduler(reg, max_batch=8, chunks=4, collect=True))
+        await front.start()
+        try:
+            return await asyncio.gather(*(front.submit(r) for r in reqs))
+        finally:
+            await front.close()
+
+    results = asyncio.run(drive())
+    by_rid = {r.rid: r for r in results}
+    assert sorted(by_rid) == [r.rid for r in reqs]
+    for req in reqs:
+        np.testing.assert_array_equal(
+            by_rid[req.rid].samples,
+            _solo_samples(reg, Request(rid=99, size=req.size,
+                                       seed=req.seed)))
+
+
+def test_async_frontend_named_errors(key):
+    reg = _registry(key)
+
+    async def unstarted():
+        await AsyncFrontend(Scheduler(reg)).submit(
+            Request(rid=0, size=1, seed=0))
+
+    with pytest.raises(RuntimeError, match="start"):
+        asyncio.run(unstarted())
+
+    async def duplicate_rid():
+        front = AsyncFrontend(Scheduler(reg, max_batch=4, chunks=4))
+        await front.start()
+        try:
+            task = asyncio.ensure_future(
+                front.submit(Request(rid=7, size=1, seed=0)))
+            await asyncio.sleep(0)  # let the first submit register its rid
+            with pytest.raises(ValueError, match="rid 7"):
+                await front.submit(Request(rid=7, size=1, seed=1))
+            await task
+        finally:
+            await front.close()
+
+    asyncio.run(duplicate_rid())
+
+    async def oversized():
+        front = AsyncFrontend(Scheduler(reg, max_batch=2, chunks=4))
+        await front.start()
+        try:
+            # scheduler-side rejection travels back through the future
+            with pytest.raises(ValueError, match="exceeds the largest"):
+                await front.submit(Request(rid=0, size=64, seed=0))
+        finally:
+            await front.close()
+
+    asyncio.run(oversized())
+
+
+def test_tcp_loopback_roundtrip(key):
+    """The JSON-lines TCP surface serves real requests: summaries come
+    back (no payloads on the wire), bad requests come back as error
+    objects, and the socket closes cleanly."""
+    reg = _registry(key)
+
+    async def drive():
+        front = AsyncFrontend(Scheduler(reg, max_batch=4, chunks=4))
+        host, port = await front.serve_tcp()
+        reader, writer = await asyncio.open_connection(host, port)
+        lines = [
+            {"rid": 0, "size": 2, "seed": 11, "deadline_ms": None},
+            {"rid": 1, "size": 1, "seed": 12, "kind": "terminal",
+             "deadline_ms": 250.0},
+            {"rid": 2, "size": 1, "seed": 13, "bogus_field": 1},
+        ]
+        for obj in lines:
+            writer.write(json.dumps(obj).encode() + b"\n")
+        await writer.drain()
+        replies = [json.loads(await reader.readline()) for _ in lines]
+        writer.close()
+        await writer.wait_closed()
+        await front.close()
+        return replies
+
+    replies = asyncio.run(drive())
+    by_rid = {r["rid"]: r for r in replies}
+    assert by_rid[0]["size"] == 2 and by_rid[0]["deadline_met"] is True
+    assert by_rid[0]["num_converged"] == 2
+    assert "samples" not in by_rid[0]
+    assert by_rid[1]["rtol"] is not None  # deadline-routed terminal batch
+    assert "bogus_field" in by_rid[2]["error"]
+
+
+def test_request_from_wire_contract():
+    req = request_from_wire({"rid": 3, "size": 2, "seed": 5,
+                             "deadline_ms": None})
+    assert req.deadline_ms == math.inf
+    with pytest.raises(ValueError, match="unknown request fields"):
+        request_from_wire({"rid": 0, "size": 1, "seed": 0, "sizee": 1})
+    with pytest.raises(ValueError, match="JSON object"):
+        request_from_wire([1, 2, 3])
+
+
+# -----------------------------------------------------------------------------
+# cross-lane preemption: engages under realtime pressure, bitwise-invisible
+# -----------------------------------------------------------------------------
+
+
+def test_preemption_pauses_and_resumes_bitwise(key):
+    """Under realtime pressure on lane "rt", lane "bulk"'s relaxed rows
+    pause at a chunk boundary and later resume — and the preempted
+    trajectories are bitwise the solo-scheduler ones."""
+    reg = _registry(key, ("bulk", "rt"))
+    sched = Scheduler(reg, max_batch=8, chunks=4, collect=True, preempt=True)
+    bulk = Request(rid=0, size=3, seed=21, model_id="bulk")  # relaxed class
+    sched.submit(bulk)
+    assert sched.step() == []  # bulk in flight, one chunk deep
+
+    # realtime terminal work lands on the OTHER lane -> bulk must yield
+    sched.submit(Request(rid=1, size=1, seed=22, model_id="rt",
+                         kind="terminal", deadline_ms=40.0))
+    results = sched.step()
+    assert [r.rid for r in results] == [1]  # realtime served this iteration
+    assert sched.counters["preempted_rows"] == 3
+    lane = sched._lanes["bulk"]
+    assert len(lane.paused) == 3 and not lane.active
+
+    results += sched.run()  # pressure gone -> bulk resumes and finishes
+    assert sched.counters["resumed_rows"] == 3
+    by_rid = {r.rid: r for r in results}
+    np.testing.assert_array_equal(
+        by_rid[0].samples,
+        _solo_samples(reg, Request(rid=9, size=3, seed=21,
+                                   model_id="bulk")))
+
+
+def test_preemption_defers_relaxed_terminal_batches(key):
+    """A non-urgent lane's relaxed-class terminal batch defers under
+    pressure; deadline-bound classes on the same lane still serve."""
+    reg = _registry(key, ("bulk", "rt"))
+    sched = Scheduler(reg, max_batch=4, chunks=4, preempt=True)
+    sched.submit(Request(rid=0, size=1, seed=1, model_id="bulk",
+                         kind="terminal"))  # relaxed (deadline inf)
+    sched.submit(Request(rid=1, size=1, seed=2, model_id="rt",
+                         kind="terminal", deadline_ms=40.0))
+    results = sched.step()
+    # the rt batch ran; bulk's relaxed terminal deferred this iteration
+    assert [r.rid for r in results] == [1]
+    assert sched._lanes["bulk"].pending_term
+    results += sched.run()
+    assert sorted(r.rid for r in results) == [0, 1]
+
+
+def test_no_preemption_without_flag(key):
+    """preempt=False (the default): realtime work elsewhere never pauses
+    another lane's rows — PR 7 behaviour is untouched."""
+    reg = _registry(key, ("bulk", "rt"))
+    sched = Scheduler(reg, max_batch=8, chunks=4)
+    sched.submit(Request(rid=0, size=2, seed=5, model_id="bulk"))
+    sched.step()
+    sched.submit(Request(rid=1, size=1, seed=6, model_id="rt",
+                         kind="terminal", deadline_ms=40.0))
+    sched.run()
+    assert sched.counters["preempted_rows"] == 0
+    assert sched.counters["resumed_rows"] == 0
+
+
+# -----------------------------------------------------------------------------
+# per-model admission quotas
+# -----------------------------------------------------------------------------
+
+
+def test_quota_bounds_in_flight_rows(key):
+    """A quota of 2 never lets the lane hold more than 2 in-flight rows,
+    yet every request eventually serves (waits, never drops)."""
+    reg = _registry(key)
+    sched = Scheduler(reg, max_batch=8, chunks=4, quota=2)
+    for i in range(4):
+        sched.submit(Request(rid=i, size=1, seed=30 + i))
+    seen_rids, max_in_flight = set(), 0
+    while sched.busy:
+        results = sched.step()
+        lane = sched._lanes["default"]
+        max_in_flight = max(max_in_flight,
+                            len(lane.active) + len(lane.paused))
+        seen_rids |= {r.rid for r in results}
+    assert max_in_flight == 2
+    assert seen_rids == {0, 1, 2, 3}
+
+
+def test_quota_dict_is_per_model(key):
+    reg = _registry(key, ("a", "b"))
+    sched = Scheduler(reg, max_batch=8, chunks=4, quota={"a": 1})
+    for i in range(2):
+        sched.submit(Request(rid=i, size=1, seed=i, model_id="a"))
+        sched.submit(Request(rid=10 + i, size=1, seed=i, model_id="b"))
+    sched.step()
+    assert len(sched._lanes["a"].active) == 1   # capped
+    assert len(sched._lanes["b"].active) == 2   # unlimited
+    sched.run()
+
+
+def test_quota_named_errors(key):
+    reg = _registry(key)
+    with pytest.raises(TypeError, match="quota"):
+        Scheduler(reg, quota="lots")
+    with pytest.raises(ValueError, match="quota"):
+        Scheduler(reg, max_batch=4, chunks=4, quota=0).submit(
+            Request(rid=0, size=1, seed=0))
+
+
+def test_bundle_serving_hints_thread_to_scheduler_quota(key, tmp_path):
+    """A bundle's serving hints ({"quota": 1}) surface on
+    LoadedModel.hints and become the lane's quota default; an explicit
+    Scheduler(quota=...) wins over the hint."""
+    cfg = NeuralSDEConfig(**GAN_CFG)
+    params = generator_init(key, cfg)
+    ckpt.save_serving_registry(tmp_path, 3,
+                               {"default": (params, "sde-gan", cfg)},
+                               serving_hints={"default": {"quota": 1}})
+    model = load_model(tmp_path)
+    assert model.hints == {"quota": 1}
+
+    reg = ModelRegistry()
+    reg.load(tmp_path)
+    sched = Scheduler(reg, max_batch=8, chunks=4)
+    sched.submit(Request(rid=0, size=1, seed=0))
+    sched.submit(Request(rid=1, size=1, seed=1))
+    sched.step()
+    assert len(sched._lanes["default"].active) == 1  # hint quota engaged
+    sched.run()
+
+    override = Scheduler(reg, max_batch=8, chunks=4, quota=2)
+    override.submit(Request(rid=0, size=1, seed=0))
+    override.submit(Request(rid=1, size=1, seed=1))
+    override.step()
+    assert len(override._lanes["default"].active) == 2
+    override.run()
+
+    with pytest.raises(ValueError, match="serving_hints"):
+        ckpt.save_serving_registry(tmp_path, 4,
+                                   {"default": (params, "sde-gan", cfg)},
+                                   serving_hints={"ghost": {"quota": 1}})
+
+
+# -----------------------------------------------------------------------------
+# elastic pools: LRU eviction under a byte budget, bitwise recompile
+# -----------------------------------------------------------------------------
+
+
+def test_pool_eviction_lru_and_bitwise_recompile(key):
+    """With a budget sized so only ~one program fits, compiling a second
+    evicts the coldest; re-serving through the evicted key recompiles and
+    the result is bitwise the unbounded registry's."""
+    free = _registry(key)
+    req = Request(rid=0, size=1, seed=77)
+    expect = _solo_samples(free, req)
+    if free.pool_bytes() == 0:
+        pytest.skip("backend reports no memory_analysis sizes — "
+                    "budget can never trip (documented fail-open)")
+
+    cfg = free.get("default").cfg
+    # a budget below the init+chunk working set forces the pair to cycle
+    # (a single program over the budget still serves — it is protected)
+    reg = ModelRegistry(pool_budget_bytes=max(1,
+                                              int(free.pool_bytes() * 0.75)))
+    reg.register(LoadedModel("default", "sde-gan", cfg,
+                             free.get("default").params))
+    sched = Scheduler(reg, max_batch=2, chunks=4, collect=True)
+    sched.submit(Request(rid=0, size=1, seed=77))
+    sched.run()
+    compiles_before = reg.compiles
+    assert reg.evictions >= 1  # init/chunk programs cycled under budget
+    assert reg.pool_bytes() <= reg.pool_budget_bytes or \
+        len(reg.pool_keys()) == 1
+
+    # the evicted program recompiles transparently and bitwise
+    sched2 = Scheduler(reg, max_batch=2, chunks=4, collect=True)
+    sched2.submit(Request(rid=1, size=1, seed=77))
+    (res,) = sched2.run()
+    assert reg.compiles > compiles_before  # a recompile actually happened
+    np.testing.assert_array_equal(res.samples, expect)
+
+
+def test_pool_budget_validation_and_accounting(key):
+    with pytest.raises(ValueError, match="pool_budget_bytes"):
+        ModelRegistry(pool_budget_bytes=0)
+    reg = _registry(key)
+    sched = Scheduler(reg, max_batch=2, chunks=4)
+    sched.submit(Request(rid=0, size=1, seed=0))
+    sched.run()
+    assert reg.compiles == len(reg.pool_keys()) > 0
+    assert reg.evictions == 0  # unbounded pool never evicts
+    assert reg.pool_bytes() == reg.pool_bytes("default")
+    reg.unload("default")
+    assert reg.pool_bytes() == 0 and reg.pool_keys() == ()
+
+
+# -----------------------------------------------------------------------------
+# per-class latency summaries (the preemption gate's read surface)
+# -----------------------------------------------------------------------------
+
+
+def test_class_latency_summary_groups_by_class(key):
+    sched = Scheduler(_registry(key), max_batch=4, chunks=4)
+    sched.submit(Request(rid=0, size=1, seed=1, kind="terminal",
+                         deadline_ms=40.0))
+    sched.submit(Request(rid=1, size=1, seed=2))  # relaxed rollout
+    summary = class_latency_summary(sched.run())
+    assert set(summary) == {"realtime", "relaxed"}
+    assert summary["realtime"]["requests"] == 1
+    assert summary["relaxed"]["rows"] == 1
+    for s in summary.values():
+        assert {"p50_s", "p99_s", "deadline_misses"} <= set(s)
